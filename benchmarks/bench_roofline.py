@@ -1,0 +1,33 @@
+"""§Roofline: the 40-cell three-term table from the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (produced by ``repro.launch.dryrun``) and
+prints the per-(arch x shape) compute/memory/collective terms, dominant
+bottleneck, MODEL_FLOPS ratio, and roofline fraction.  See
+EXPERIMENTS.md §Roofline-methodology for sourcing and corrections.
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+from repro.launch import roofline
+
+
+def main(print_csv: bool = True, dryrun_dir: str = "experiments/dryrun"):
+    if not pathlib.Path(dryrun_dir).exists():
+        print(f"# no dry-run artifacts under {dryrun_dir}; run "
+              f"`python -m repro.launch.dryrun` first")
+        return []
+    rows = roofline.load_cells(dryrun_dir)
+    if print_csv:
+        print("arch,shape,compute_s,memory_s,collective_s,bottleneck,"
+              "model_flops,useful_ratio,roofline_frac")
+        for r in rows:
+            print(f"{r.arch},{r.shape},{r.compute_s:.4f},{r.memory_s:.4f},"
+                  f"{r.collective_s:.4f},{r.dominant},{r.model_flops:.3e},"
+                  f"{r.useful_ratio:.3f},{r.roofline_fraction:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

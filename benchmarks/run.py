@@ -1,0 +1,66 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Emits ``name,us_per_call,derived`` CSV lines per benchmark plus each
+benchmark's own detailed CSV.  Mapping to the paper:
+    layers        — Fig. 4   (latency/resources vs unroll, 5 layer types)
+    tool_runtime  — Fig. 2/5 (compiler runtime vs trip count)
+    braggnn       — §4.2/Fig. 6 (end-to-end case study)
+    precision     — Fig. 7   (trained-weight exponents, accuracy sweep)
+    roofline      — §Roofline (TPU adaptation; reads dry-run artifacts)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _timed(name, fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) * 1e6
+    print(f"{name},{dt:.0f},ok")
+    sys.stdout.flush()
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sizes (CI-friendly)")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (bench_braggnn, bench_layers, bench_precision,
+                            bench_roofline, bench_tool_runtime)
+
+    todo = args.only.split(",") if args.only else [
+        "layers", "tool_runtime", "braggnn", "precision", "roofline"]
+
+    print("name,us_per_call,derived")
+    if "layers" in todo:
+        print("## Fig4: layer suite ##")
+        _timed("bench_layers", bench_layers.main)
+    if "tool_runtime" in todo:
+        print("## Fig2/5: tool runtime ##")
+        if args.fast:
+            bench_tool_runtime.IMAGE_SIZES = (8, 16, 32)
+        _timed("bench_tool_runtime", bench_tool_runtime.main)
+    if "braggnn" in todo:
+        print("## §4.2: BraggNN case study ##")
+        img = 9 if args.fast else 11
+        _timed("bench_braggnn", bench_braggnn.main, img=img)
+    if "precision" in todo:
+        print("## Fig7: precision study ##")
+        steps = 60 if args.fast else 300
+        _timed("bench_precision", bench_precision.main, steps=steps)
+    if "roofline" in todo:
+        print("## §Roofline: 40-cell table ##")
+        _timed("bench_roofline", bench_roofline.main)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""repro: OpenHLS reproduced as a JAX/TPU framework.
+
+Subpackages:
+    core        — the paper's compiler (symbolic interpretation, passes,
+                  scheduling, precision, binding, verification)
+    nn          — model substrate (layers, attention, MoE, RG-LRU, xLSTM)
+    models      — assembled models (CausalLM, BraggNN, encoder-decoder)
+    kernels     — Pallas TPU kernels with jnp oracles
+    configs     — assigned architectures + shapes
+    launch      — mesh construction, dry-run, roofline, train/serve drivers
+    data/optim/checkpoint/runtime/serving — production substrate
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Assigned architectures x shapes (see registry)."""
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, supports_shape
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeConfig", "supports_shape"]

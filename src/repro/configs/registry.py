@@ -1,0 +1,123 @@
+"""Architecture registry + per-cell input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the lowered step function (weak-type-correct, shardable, no device
+allocation) — the dry-run contract.  Modality frontends are stubs per the
+brief: whisper gets precomputed frame embeddings, qwen2-vl gets precomputed
+patch embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (braggnn, gemma2_27b, mixtral_8x7b, qwen2_7b,
+                           qwen2_moe_a27b, qwen2_vl_2b, qwen25_3b,
+                           recurrentgemma_9b, stablelm_3b, whisper_tiny,
+                           xlstm_1_3b)
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, supports_shape
+
+_MODULES = {
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "gemma2-27b": gemma2_27b,
+    "qwen2-7b": qwen2_7b,
+    "stablelm-3b": stablelm_3b,
+    "qwen2.5-3b": qwen25_3b,
+    "whisper-tiny": whisper_tiny,
+    "qwen2-moe-a2.7b": qwen2_moe_a27b,
+    "mixtral-8x7b": mixtral_8x7b,
+    "xlstm-1.3b": xlstm_1_3b,
+    "qwen2-vl-2b": qwen2_vl_2b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch == "braggnn":
+        return braggnn.CONFIG
+    return _MODULES[arch].CONFIG
+
+
+def get_tiny(arch: str):
+    if arch == "braggnn":
+        return braggnn.tiny()
+    return _MODULES[arch].tiny()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def all_cells(include_skipped: bool = False):
+    """Yield (arch_id, shape_name, supported, reason) for all 40 cells."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, why = supports_shape(cfg, shape)
+            if ok or include_skipped:
+                yield arch, sname, ok, why
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for the step function's data inputs.
+
+    train:    {tokens, targets[, patches | frames]}
+    prefill:  {tokens[, patches | frames]}
+    decode:   {tokens (B,1), pos (B,)}   (cache specs are built separately)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.activation_dtype)
+
+    if getattr(cfg, "is_encoder_decoder", False):
+        frames = jax.ShapeDtypeStruct((b, cfg.encoder_len, cfg.d_model), act)
+        if shape.kind == "train":
+            return {"frames": frames,
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "targets": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape.kind == "prefill":
+            return {"frames": frames,
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                "pos": jax.ShapeDtypeStruct((b,), i32)}
+
+    if shape.kind in ("train", "prefill"):
+        out = {}
+        n_text = s
+        if cfg.n_patches:
+            out["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), act)
+            n_text = s - cfg.n_patches
+        out["tokens"] = jax.ShapeDtypeStruct((b, n_text), i32)
+        if shape.kind == "train":
+            out["targets"] = jax.ShapeDtypeStruct((b, n_text), i32)
+        return out
+
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((b,), i32)}
+
+
+def input_axes(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Logical axes matching ``input_specs`` (resolved by BindingRules)."""
+    if getattr(cfg, "is_encoder_decoder", False):
+        if shape.kind == "train":
+            return {"frames": ("batch", None, None),
+                    "tokens": ("batch", None), "targets": ("batch", None)}
+        if shape.kind == "prefill":
+            return {"frames": ("batch", None, None),
+                    "tokens": ("batch", None)}
+        return {"tokens": ("batch", None), "pos": ("batch",)}
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": ("batch", None)}
+        if cfg.n_patches:
+            out["patches"] = ("batch", None, None)
+        if shape.kind == "train":
+            out["targets"] = ("batch", None)
+        return out
+    return {"tokens": ("batch", None), "pos": ("batch",)}

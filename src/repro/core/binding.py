@@ -1,0 +1,125 @@
+"""Resource binding at pod scale: parallel axes -> mesh axes (paper §3.3).
+
+On the FPGA, OpenHLS binds the instances of an scf.parallel iteration space
+to K_i functional units.  On a TPU pod the functional units are chips, and
+the binding is a sharding: each *named* parallel axis of a tensor operation
+(batch, heads, experts, ...) binds to a mesh axis via a rule table, and
+K_i = product of bound mesh-axis sizes is the replication factor — exactly
+the paper's K_i, computed over devices instead of DSPs.
+
+This module is the single source of truth for shardings across the
+framework: model code annotates arrays with *logical* axis names, and the
+launcher resolves them against the active mesh through these rules
+(MaxText-style logical axis rules, derived here from the paper's binding
+discipline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, tuple[str, ...]]
+
+
+#: Default rule table for the production mesh (pod, data, model).
+#: First matching rule wins.  ``None`` = replicated along that logical axis.
+DEFAULT_RULES: tuple[tuple[str, MeshAxes], ...] = (
+    ("batch", ("pod", "data")),   # DP across pods and the data axis
+    ("seq", None),                # sequence replicated in train (SP opt-in)
+    ("seq_shard", "data"),        # context/sequence parallelism (opt-in)
+    ("embed", None),              # activations' feature dim replicated
+    ("heads", "model"),           # TP over attention heads
+    ("kv_heads", "model"),        # TP over KV heads (GQA)
+    ("qkv", None),
+    ("mlp", "model"),             # TP over FFN hidden (Megatron column)
+    ("mlp_in", "model"),
+    ("experts", "model"),         # EP: experts bound to the model axis
+    ("expert_mlp", None),         # within-expert hidden replicated under EP
+    ("expert_embed", None),       # FSDP opt-in for huge replicated experts
+    ("vocab", "model"),           # TP over the embedding/vocab dim
+    ("kv_batch", ("pod", "data")),  # KV cache batch dim
+    ("layers", None),             # stacked-layer leading dim (scan axis)
+    ("conv", None),
+    ("head_dim", None),           # per-arch overrides bind this to model
+    ("opt_embed", "data"),        # ZeRO: optimizer state also shards the
+                                  # embed dim over data (see optim.adamw)
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BindingRules:
+    rules: tuple[tuple[str, MeshAxes], ...] = DEFAULT_RULES
+
+    def mesh_axes_for(self, logical: Optional[str],
+                      mesh: Mesh) -> MeshAxes:
+        if logical is None:
+            return None
+        for name, target in self.rules:
+            if name != logical:
+                continue
+            if target is None:
+                return None
+            axes = (target,) if isinstance(target, str) else tuple(target)
+            present = tuple(a for a in axes if a in mesh.shape)
+            if not present:
+                return None
+            return present if len(present) > 1 else present[0]
+        return None
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             mesh: Mesh) -> P:
+        """PartitionSpec for an array annotated with logical axis names."""
+        used: set[str] = set()
+        out: list[MeshAxes] = []
+        for ax in logical_axes:
+            target = self.mesh_axes_for(ax, mesh)
+            if target is None:
+                out.append(None)
+                continue
+            axes = (target,) if isinstance(target, str) else tuple(target)
+            fresh = tuple(a for a in axes if a not in used)
+            used.update(fresh)
+            if not fresh:
+                out.append(None)
+            elif len(fresh) == 1:
+                out.append(fresh[0])
+            else:
+                out.append(fresh)
+        return P(*out)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]],
+                 mesh: Mesh) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(logical_axes, mesh))
+
+    def K(self, logical_axes: Sequence[Optional[str]], mesh: Mesh) -> int:
+        """Replication factor K_i of a binding (paper §3.3): the number of
+        devices an op's parallel iteration space is spread across."""
+        spec = self.spec(logical_axes, mesh)
+        k = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = (entry,) if isinstance(entry, str) else entry
+            for a in axes:
+                k *= mesh.shape[a]
+        return k
+
+    def with_overrides(self, **overrides: MeshAxes) -> "BindingRules":
+        """Return new rules with some logical axes re-bound (hillclimbing)."""
+        new = tuple((k, v) for k, v in overrides.items())
+        rest = tuple((k, v) for k, v in self.rules if k not in overrides)
+        return BindingRules(new + rest)
+
+
+def tree_shardings(axes_tree, mesh: Mesh,
+                   rules: Optional[BindingRules] = None):
+    """Map a pytree of logical-axes tuples to a pytree of NamedShardings."""
+    rules = rules or BindingRules()
+    return jax.tree_util.tree_map(
+        lambda axes: rules.sharding(axes, mesh), axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))

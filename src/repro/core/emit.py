@@ -1,0 +1,233 @@
+"""Design emission + functional simulation (paper §3.1 item 4, §3.2).
+
+Three execution backends for a scheduled DFG:
+
+  * ``evaluate``      — numpy functional simulation in program order.  With a
+                        ``FloatFormat`` this becomes the FloPoCo functional
+                        model (quantise after every operation), i.e. the
+                        reference the paper's testbenches compare RTL against.
+  * ``to_jax_fn``     — "RTL emission" for TPU: the DFG is levelised by its
+                        schedule and each (cycle-level, opcode) group becomes
+                        one vectorised gather/compute/scatter — a SIMD
+                        rendering of the fully scheduled design.  The emitted
+                        function is jittable and exactly evaluates the DFG.
+  * the tensor path   — production inference uses the tensor-level model
+                        (``repro.models``) with ``precision.quantize``
+                        inserted per the chosen format; the scalar DFG
+                        backends above serve as its behavioural oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.ir import Graph
+from repro.core.precision import FloatFormat, quantize_np
+
+
+def _input_arrays(g: Graph, feeds: dict[str, np.ndarray], batch: int
+                  ) -> dict[int, np.ndarray]:
+    """Scatter feed tensors into per-value (batch,) vectors."""
+    vals: dict[int, np.ndarray] = {}
+    for name, table in g.inputs.items():
+        if name not in feeds:
+            raise KeyError(f"missing feed for input memref '{name}'")
+        arr = np.asarray(feeds[name], dtype=np.float32)
+        for idx, vid in table.items():
+            if arr.ndim == len(idx):          # unbatched feed: broadcast
+                vals[vid] = np.full((batch,), arr[idx], dtype=np.float32)
+            else:                              # leading batch dimension
+                vals[vid] = np.ascontiguousarray(
+                    arr[(slice(None),) + idx], dtype=np.float32)
+    return vals
+
+
+def evaluate(g: Graph, feeds: dict[str, np.ndarray], *,
+             fmt: Optional[FloatFormat] = None,
+             batch: Optional[int] = None) -> dict[str, np.ndarray]:
+    """Functional simulation of the DFG on a batch of input vectors.
+
+    feeds: memref name -> array of shape ``shape`` or ``(batch,) + shape``.
+    fmt:   if given, every input, constant and op result is quantised —
+           the FloPoCo functional-model mode (paper §3.1 item 4).
+    """
+    if batch is None:
+        batch = 1
+        for name, arr in feeds.items():
+            arr = np.asarray(arr)
+            want = g.inputs.get(name)
+            if want and arr.ndim == len(next(iter(want))) + 1:
+                batch = arr.shape[0]
+                break
+    q = (lambda x: quantize_np(x, fmt)) if fmt is not None else (lambda x: x)
+
+    vals = _input_arrays(g, feeds, batch)
+    for vid in list(vals):
+        vals[vid] = q(vals[vid])
+    for vid, c in g.consts.items():
+        vals[vid] = q(np.full((batch,), c, dtype=np.float32))
+
+    for op in g.ops:
+        a = op.args
+        oc = op.opcode
+        if oc == "mulf":
+            r = vals[a[0]] * vals[a[1]]
+        elif oc == "addf":
+            r = vals[a[0]] + vals[a[1]]
+        elif oc == "subf":
+            r = vals[a[0]] - vals[a[1]]
+        elif oc == "divf":
+            r = vals[a[0]] / vals[a[1]]
+        elif oc == "sqrtf":
+            r = np.sqrt(vals[a[0]])
+        elif oc == "maxf":
+            r = np.maximum(vals[a[0]], vals[a[1]])
+        elif oc == "minf":
+            r = np.minimum(vals[a[0]], vals[a[1]])
+        elif oc == "negf":
+            r = -vals[a[0]]
+        elif oc == "relu":
+            r = np.maximum(vals[a[0]], 0.0)
+        elif oc == "fmac":
+            # fmac(b, c, a) = b*c + a, rounded once (fused on FPGA)
+            r = vals[a[0]] * vals[a[1]] + vals[a[2]]
+        elif oc == "cmpugt":
+            r = (vals[a[0]] > vals[a[1]]).astype(np.float32)
+        elif oc == "select":
+            r = np.where(vals[a[0]] > 0.5, vals[a[1]], vals[a[2]])
+        elif oc == "load":
+            r = vals[a[0]]
+        elif oc == "store":
+            r = vals[a[0]]
+        elif oc == "copy":
+            r = vals[a[0]]
+        else:  # pragma: no cover
+            raise NotImplementedError(oc)
+        if oc not in ("cmpugt", "load", "store", "copy"):
+            r = q(r)
+        if op.result >= 0:
+            vals[op.result] = r
+
+    outs: dict[str, np.ndarray] = {}
+    for name, table in g.outputs.items():
+        shape = tuple(max(i[d] for i in table) + 1
+                      for d in range(len(next(iter(table)))))
+        out = np.zeros((batch,) + shape, dtype=np.float32)
+        for idx, vid in table.items():
+            out[(slice(None),) + idx] = vals[vid]
+        outs[name] = out
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# SIMD emission: the TPU rendering of the fully scheduled design
+# ---------------------------------------------------------------------------
+
+def to_jax_fn(g: Graph) -> Callable[[dict[str, "np.ndarray"]], dict[str, "np.ndarray"]]:
+    """Emit a jittable function that exactly evaluates the DFG.
+
+    The DFG is levelised (ASAP with unit delays); each (level, opcode) group
+    becomes one gather -> vector op -> scatter.  This is the SIMD analogue of
+    RTL emission: every op executes at its scheduled level, with no dynamic
+    control flow — the XLA program is the FSM.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    # levelise
+    level = np.zeros(g.n_values, dtype=np.int64)
+    op_level = np.zeros(len(g.ops), dtype=np.int64)
+    for op in g.ops:
+        lv = 0
+        for a in op.args:
+            lv = max(lv, int(level[a]) + 1)
+        op_level[op.idx] = lv
+        if op.result >= 0:
+            level[op.result] = lv
+
+    # group ops by (level, opcode)
+    groups: dict[tuple[int, str], list] = {}
+    for op in g.ops:
+        groups.setdefault((int(op_level[op.idx]), op.opcode), []).append(op)
+    ordered = sorted(groups.items(), key=lambda kv: kv[0][0])
+
+    # precompute gather/scatter index arrays
+    compiled_groups = []
+    for (lv, oc), ops in ordered:
+        n_args = max(len(o.args) for o in ops)
+        arg_idx = [np.array([o.args[i] if i < len(o.args) else 0
+                             for o in ops], dtype=np.int32)
+                   for i in range(n_args)]
+        res_idx = np.array([o.result for o in ops], dtype=np.int32)
+        compiled_groups.append((oc, arg_idx, res_idx))
+
+    const_idx = np.array(sorted(g.consts), dtype=np.int32)
+    const_val = np.array([g.consts[int(i)] for i in const_idx],
+                         dtype=np.float32)
+    input_scatter = {
+        name: (np.array([vid for _, vid in sorted(table.items())],
+                        dtype=np.int32),
+               [idx for idx, _ in sorted(table.items())])
+        for name, table in g.inputs.items()
+    }
+    output_gather = {
+        name: (np.array([vid for _, vid in sorted(table.items())],
+                        dtype=np.int32),
+               tuple(max(i[d] for i in table) + 1
+                     for d in range(len(next(iter(table))))))
+        for name, table in g.outputs.items()
+    }
+    n_values = g.n_values
+
+    def run(feeds: dict[str, jax.Array]) -> dict[str, jax.Array]:
+        example_name = next(iter(input_scatter))
+        rank = len(next(iter(g.inputs[example_name])))
+        ex_shape = jnp.shape(feeds[example_name])
+        batch = ex_shape[0] if len(ex_shape) == rank + 1 else 1
+        buf = jnp.zeros((batch, n_values), dtype=jnp.float32)
+        buf = buf.at[:, const_idx].set(const_val[None, :])
+        for name, (vids, idxs) in input_scatter.items():
+            arr = jnp.asarray(feeds[name], dtype=jnp.float32)
+            if arr.ndim == len(idxs[0]):
+                arr = arr[None]
+            flat = jnp.stack([arr[(slice(None),) + i] for i in idxs], axis=1)
+            buf = buf.at[:, vids].set(flat)
+        for oc, arg_idx, res_idx in compiled_groups:
+            a = [buf[:, ai] for ai in arg_idx]
+            if oc == "mulf":
+                r = a[0] * a[1]
+            elif oc == "addf":
+                r = a[0] + a[1]
+            elif oc == "subf":
+                r = a[0] - a[1]
+            elif oc == "divf":
+                r = a[0] / a[1]
+            elif oc == "sqrtf":
+                r = jnp.sqrt(a[0])
+            elif oc == "maxf":
+                r = jnp.maximum(a[0], a[1])
+            elif oc == "minf":
+                r = jnp.minimum(a[0], a[1])
+            elif oc == "negf":
+                r = -a[0]
+            elif oc == "relu":
+                r = jnp.maximum(a[0], 0.0)
+            elif oc == "fmac":
+                r = a[0] * a[1] + a[2]
+            elif oc == "cmpugt":
+                r = (a[0] > a[1]).astype(jnp.float32)
+            elif oc == "select":
+                r = jnp.where(a[0] > 0.5, a[1], a[2])
+            elif oc in ("load", "store", "copy"):
+                r = a[0]
+            else:  # pragma: no cover
+                raise NotImplementedError(oc)
+            buf = buf.at[:, res_idx].set(r)
+        outs = {}
+        for name, (vids, shape) in output_gather.items():
+            outs[name] = buf[:, vids].reshape((batch,) + shape)
+        return outs
+
+    return run

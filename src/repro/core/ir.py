@@ -1,0 +1,270 @@
+"""SSA dataflow-graph IR for the OpenHLS compiler.
+
+The unit of representation is the *fully unrolled, scalar* dataflow graph
+(DFG) of a DNN, exactly as recovered by symbolic interpretation of the
+scf-dialect loop nests (paper §3.1).  Values are dense integer ids; ops are
+flat records.  After interpretation with store-load forwarding there are no
+load/store ops left — only arithmetic ops, graph inputs (hoisted weights and
+activations), and graph outputs (final contents of output memrefs).
+
+A second, optional mode (``forward=False`` in the interpreter) keeps explicit
+``load``/``store`` ops with memory-port resource constraints.  That mode
+models a conventional HLS tool that cannot forward through memory (the
+paper's Vitis HLS baseline, §4.1) and is used by the Fig. 4 benchmark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, Optional, Sequence
+
+# ---------------------------------------------------------------------------
+# Opcodes
+# ---------------------------------------------------------------------------
+
+#: Floating-point arithmetic ops (bind to DSP-like units on FPGA; MXU/VPU
+#: lanes on TPU).  Delay table below gives FloPoCo-ish pipeline depths in
+#: cycles at the paper's 10 ns target clock.
+ARITH_OPS = frozenset({
+    "mulf", "addf", "subf", "divf", "sqrtf", "maxf", "minf", "negf",
+    "relu", "fmac", "expf", "cmpugt", "select", "copy",
+})
+
+#: Memory ops — only present when store-load forwarding is disabled.
+MEM_OPS = frozenset({"load", "store"})
+
+#: Structural pseudo-ops.
+META_OPS = frozenset({"input", "const", "output"})
+
+ALL_OPS = ARITH_OPS | MEM_OPS | META_OPS
+
+#: Pipeline depth (cycles @ 10 ns) per op.  Calibrated against FloPoCo
+#: (5,11)/(5,4) core latencies reported in the FloPoCo literature and tuned
+#: so that the scheduled BraggNN(s=1) lands in the neighbourhood of the
+#: paper's 1238-interval design (EXPERIMENTS.md §Paper-claims).
+DEFAULT_DELAYS: dict[str, int] = {
+    "mulf": 2,
+    "addf": 3,
+    "subf": 3,
+    "fmac": 4,      # fused multiply-accumulate (paper §3.2 "Remove MACs")
+    "divf": 12,
+    "sqrtf": 12,
+    "maxf": 1,
+    "minf": 1,
+    "negf": 0,      # sign-flip is free in FloPoCo encoding (paper §3)
+    "relu": 0,      # combinational: mux on sign bit
+    "expf": 0,      # never scheduled directly: expanded into Taylor series
+    "cmpugt": 1,
+    "select": 0,
+    "copy": 0,
+    "load": 1,
+    "store": 1,
+    "input": 0,
+    "const": 0,
+    "output": 0,
+}
+
+#: Resource class each opcode binds to.  ``None`` means unconstrained
+#: (combinational / free).  The paper binds mulf and addf to separate DSP
+#: instantiations ("2 K_i DSPs, assuming mulf, addf bind to one DSP each").
+RESOURCE_CLASS: dict[str, Optional[str]] = {
+    "mulf": "mul",
+    "addf": "add",
+    "subf": "add",
+    "fmac": "mac",
+    "divf": "div",
+    "sqrtf": "sqrt",
+    "maxf": "cmp",
+    "minf": "cmp",
+    "cmpugt": "cmp",
+    "negf": None,
+    "relu": None,
+    "select": None,
+    "copy": None,
+    "expf": None,
+    "load": "port",   # memory ports are per-array resources
+    "store": "port",
+    "input": None,
+    "const": None,
+    "output": None,
+}
+
+
+@dataclasses.dataclass(slots=True)
+class Op:
+    """One node of the DFG.
+
+    idx:      position in program (interpretation) order — the linear order
+              used to serialise same-resource operations (paper §3.3).
+    opcode:   one of ALL_OPS.
+    args:     operand value ids.
+    result:   result value id (-1 for store/output).
+    nest:     id of the originating loop nest (one per DNN operation).
+    rank:     linear index of this op's parallel-iteration instance within
+              its nest's parallel iteration space (the "j" in the paper's
+              resource indexing), or -1 when not inside an scf.parallel.
+    array:    for load/store: name of the memref accessed (port binding).
+    """
+
+    idx: int
+    opcode: str
+    args: tuple[int, ...]
+    result: int
+    nest: int = -1
+    rank: int = -1
+    array: str = ""
+
+
+class Graph:
+    """Flat SSA DFG plus interface metadata."""
+
+    def __init__(self) -> None:
+        self.ops: list[Op] = []
+        self.n_values: int = 0
+        # value id -> producing op index (-1 for inputs/consts)
+        self.producer: list[int] = []
+        # interface: memref name -> {index tuple -> value id}
+        self.inputs: dict[str, dict[tuple[int, ...], int]] = {}
+        self.outputs: dict[str, dict[tuple[int, ...], int]] = {}
+        # value id -> python float for constants
+        self.consts: dict[int, float] = {}
+        # nest id -> size of its parallel iteration space (K_i, paper §3.3)
+        self.nest_parallel_space: dict[int, int] = {}
+        # nest id -> human-readable label (e.g. "conv2d_0")
+        self.nest_labels: dict[int, str] = {}
+        # subset of input memref names that are weights ("hoisted globals",
+        # paper §3.2): exposed at the module interface like any input, but
+        # bound to trained constants at deployment time.
+        self.weight_names: set[str] = set()
+
+    # -- construction -------------------------------------------------------
+
+    def new_value(self) -> int:
+        vid = self.n_values
+        self.n_values += 1
+        self.producer.append(-1)
+        return vid
+
+    def add_op(
+        self,
+        opcode: str,
+        args: Sequence[int],
+        *,
+        nest: int = -1,
+        rank: int = -1,
+        array: str = "",
+        result: Optional[int] = None,
+    ) -> int:
+        """Append an op; returns its result value id (or -1)."""
+        assert opcode in ALL_OPS, opcode
+        if result is None:
+            result = -1 if opcode in ("store", "output") else self.new_value()
+        op = Op(len(self.ops), opcode, tuple(args), result, nest, rank, array)
+        self.ops.append(op)
+        if result >= 0:
+            self.producer[result] = op.idx
+        return result
+
+    def add_const(self, value: float) -> int:
+        vid = self.new_value()
+        self.consts[vid] = float(value)
+        return vid
+
+    # -- queries ------------------------------------------------------------
+
+    def num_arith_ops(self) -> int:
+        return sum(1 for op in self.ops if op.opcode in ARITH_OPS)
+
+    def op_histogram(self) -> dict[str, int]:
+        hist: dict[str, int] = {}
+        for op in self.ops:
+            hist[op.opcode] = hist.get(op.opcode, 0) + 1
+        return hist
+
+    def use_counts(self) -> list[int]:
+        uses = [0] * self.n_values
+        for op in self.ops:
+            for a in op.args:
+                uses[a] += 1
+        for table in self.outputs.values():
+            for vid in table.values():
+                uses[vid] += 1
+        return uses
+
+    def K(self) -> int:
+        """Peak resource replication: K = max_i K_i (paper §3.3)."""
+        if not self.nest_parallel_space:
+            return 1
+        return max(self.nest_parallel_space.values())
+
+    def output_values(self) -> list[int]:
+        out: list[int] = []
+        for table in self.outputs.values():
+            out.extend(table.values())
+        return out
+
+    def input_values(self) -> list[int]:
+        out: list[int] = []
+        for table in self.inputs.values():
+            out.extend(table.values())
+        return out
+
+    # -- rewriting ----------------------------------------------------------
+
+    def rewrite(self, live_ops: Iterable[Op]) -> "Graph":
+        """Rebuild a graph from a subset/sequence of (possibly new) ops.
+
+        ``live_ops`` must be topologically ordered.  Value ids are preserved
+        (the new graph keeps the same value-id space), which keeps interface
+        tables valid.  Producer indices are recomputed.
+        """
+        g = Graph()
+        g.n_values = self.n_values
+        g.producer = [-1] * self.n_values
+        g.inputs = {k: dict(v) for k, v in self.inputs.items()}
+        g.outputs = {k: dict(v) for k, v in self.outputs.items()}
+        g.consts = dict(self.consts)
+        g.nest_parallel_space = dict(self.nest_parallel_space)
+        g.nest_labels = dict(self.nest_labels)
+        g.weight_names = set(self.weight_names)
+        for op in live_ops:
+            new = Op(len(g.ops), op.opcode, op.args, op.result, op.nest,
+                     op.rank, op.array)
+            g.ops.append(new)
+            if new.result >= 0:
+                g.producer[new.result] = new.idx
+        return g
+
+    def topo_check(self) -> None:
+        """Assert program order is a valid topological order (SSA def-before-use)."""
+        defined = [False] * self.n_values
+        for vid in self.consts:
+            defined[vid] = True
+        for table in self.inputs.values():
+            for vid in table.values():
+                defined[vid] = True
+        for op in self.ops:
+            for a in op.args:
+                if not defined[a]:
+                    raise ValueError(
+                        f"op {op.idx} ({op.opcode}) uses undefined value {a}")
+            if op.result >= 0:
+                defined[op.result] = True
+        for name, table in self.outputs.items():
+            for vid in table.values():
+                if not defined[vid]:
+                    raise ValueError(f"output {name} reads undefined value {vid}")
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        h = self.op_histogram()
+        return (f"Graph(ops={len(self.ops)}, values={self.n_values}, "
+                f"K={self.K()}, hist={h})")
+
+
+def iter_edges(g: Graph) -> Iterator[tuple[int, int]]:
+    """Yield (producer_op_idx, consumer_op_idx) data-dependence edges."""
+    for op in g.ops:
+        for a in op.args:
+            p = g.producer[a]
+            if p >= 0:
+                yield (p, op.idx)

@@ -1,0 +1,303 @@
+"""Graph transformations (paper §3.2 "AST transformations and verification").
+
+All passes are *behaviourally* verified (see ``repro.core.verify``) rather
+than formally proven — the paper's explicit trade of formal correctness for
+development-time performance.  Each pass is a linear rewrite over the op
+list, preserving program order (and therefore topological validity and the
+resource serialisation order of §3.3).
+
+Pass inventory, mapped to the paper:
+  * ``hoist_globals``    — structural in this implementation: weights are
+                           declared as interface memrefs by the frontend, and
+                           this pass *verifies* no weight-like constant tensor
+                           remains inline.
+  * ``relu_recompose``   — cmpf ugt + select  ->  relu        (§3.2 item 2)
+  * ``reduction_tree``   — sequential add/max chains -> balanced trees,
+                           scheduled ALAP among subtrees      (§3.2 item 4, §3.3)
+  * ``fmac_coalesce``    — mul feeding a single add -> fmac   (§3.2 item 3)
+  * ``cse`` / ``dce``    — standard cleanups enabled by SSA recovery.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.core.ir import ARITH_OPS, Graph, Op
+
+
+class Rewriter:
+    """Builds a rewritten graph while preserving the old value-id space."""
+
+    def __init__(self, g: Graph):
+        self.src = g
+        self.out = Graph()
+        self.out.n_values = g.n_values
+        self.out.producer = [-1] * g.n_values
+        self.out.inputs = {k: dict(v) for k, v in g.inputs.items()}
+        self.out.outputs = {k: dict(v) for k, v in g.outputs.items()}
+        self.out.consts = dict(g.consts)
+        self.out.nest_parallel_space = dict(g.nest_parallel_space)
+        self.out.nest_labels = dict(g.nest_labels)
+        self.out.weight_names = set(g.weight_names)
+        self.repl: dict[int, int] = {}
+
+    def lookup(self, vid: int) -> int:
+        while vid in self.repl:
+            vid = self.repl[vid]
+        return vid
+
+    def keep(self, op: Op) -> None:
+        args = tuple(self.lookup(a) for a in op.args)
+        self.out.ops.append(Op(len(self.out.ops), op.opcode, args, op.result,
+                               op.nest, op.rank, op.array))
+        if op.result >= 0:
+            self.out.producer[op.result] = len(self.out.ops) - 1
+
+    def emit(self, opcode: str, args: Sequence[int], *, nest: int, rank: int,
+             array: str = "", result: Optional[int] = None) -> int:
+        args = tuple(self.lookup(a) for a in args)
+        if result is None:
+            result = self.out.new_value()
+        self.out.ops.append(Op(len(self.out.ops), opcode, args, result, nest,
+                               rank, array))
+        if result >= 0:
+            self.out.producer[result] = len(self.out.ops) - 1
+        return result
+
+    def replace(self, old_vid: int, new_vid: int) -> None:
+        self.repl[old_vid] = new_vid
+
+    def finish(self) -> Graph:
+        # remap interface outputs through the replacement table
+        for name, table in self.out.outputs.items():
+            for idx in table:
+                table[idx] = self.lookup(table[idx])
+        self.out.topo_check()
+        return self.out
+
+
+# ---------------------------------------------------------------------------
+
+
+def dce(g: Graph) -> Graph:
+    """Dead-code elimination backwards from graph outputs.
+
+    ``store`` ops are always considered live (baseline no-forwarding mode
+    models a tool that cannot eliminate memory traffic).
+    """
+    live_vals = set(g.output_values())
+    keep = [False] * len(g.ops)
+    for op in reversed(g.ops):
+        if op.opcode == "store" or (op.result >= 0 and op.result in live_vals):
+            keep[op.idx] = True
+            live_vals.update(op.args)
+    rw = Rewriter(g)
+    for op in g.ops:
+        if keep[op.idx]:
+            rw.keep(op)
+    return rw.finish()
+
+
+def cse(g: Graph) -> Graph:
+    """Common-subexpression elimination (commutative-aware)."""
+    commutative = {"mulf", "addf", "maxf", "minf"}
+    seen: dict[tuple, int] = {}
+    rw = Rewriter(g)
+    for op in g.ops:
+        if op.opcode not in ARITH_OPS:
+            rw.keep(op)
+            continue
+        args = tuple(rw.lookup(a) for a in op.args)
+        key_args = tuple(sorted(args)) if op.opcode in commutative else args
+        key = (op.opcode, key_args)
+        hit = seen.get(key)
+        if hit is not None:
+            rw.replace(op.result, hit)
+        else:
+            seen[key] = op.result
+            rw.keep(op)
+    return rw.finish()
+
+
+def relu_recompose(g: Graph) -> Graph:
+    """select(cmpf_ugt(x, 0), x, 0) -> relu(x)   (paper §3.2 item 2)."""
+    uses = g.use_counts()
+    zero_consts = {vid for vid, v in g.consts.items() if v == 0.0}
+    # result vid -> (op, x vid) for candidate compares
+    cmps: dict[int, tuple[Op, int]] = {}
+    for op in g.ops:
+        if (op.opcode == "cmpugt" and len(op.args) == 2
+                and op.args[1] in zero_consts):
+            cmps[op.result] = (op, op.args[0])
+    dead_cmp: set[int] = set()
+    rw = Rewriter(g)
+    for op in g.ops:
+        if op.opcode == "select" and op.args[0] in cmps:
+            cmp_op, x = cmps[op.args[0]]
+            if op.args[1] == x and op.args[2] in zero_consts:
+                rw.emit("relu", (x,), nest=op.nest, rank=op.rank,
+                        result=op.result)
+                if uses[cmp_op.result] == 1:
+                    dead_cmp.add(cmp_op.idx)
+                continue
+        rw.keep(op)
+    out = rw.finish()
+    if dead_cmp:
+        out = dce(out)
+    return out
+
+
+def reduction_tree(g: Graph, *, threshold: int = 4) -> Graph:
+    """Rebalance sequential reduction chains into binary trees (§3.2 item 4).
+
+    A chain is a maximal run  o_1, ..., o_n  of the same associative opcode
+    where each o_{t+1} consumes o_t's result and that result has no other
+    use.  The chain is replaced by a balanced tree over its leaves, halving
+    depth from O(n) to O(log n) — the dominant latency lever for the inner
+    reduction loops of conv/linear layers.
+    """
+    associative = {"addf", "maxf", "minf"}
+    uses = g.use_counts()
+    # chain_next[i] = op idx of the chain continuation of op i (or -1)
+    chain_next = [-1] * len(g.ops)
+    chain_prev = [-1] * len(g.ops)
+    for op in g.ops:
+        if op.opcode not in associative:
+            continue
+        for a in op.args:
+            p = g.producer[a]
+            if p < 0:
+                continue
+            pred = g.ops[p]
+            if (pred.opcode == op.opcode and uses[pred.result] == 1
+                    and pred.nest == op.nest and pred.rank == op.rank):
+                chain_next[p] = op.idx
+                chain_prev[op.idx] = p
+                break  # at most one chain predecessor
+
+    in_chain = [False] * len(g.ops)
+    chains: list[list[int]] = []  # lists of op idxs, head first
+    for op in g.ops:
+        if chain_prev[op.idx] >= 0 or chain_next[op.idx] < 0:
+            continue  # not a chain head
+        run = [op.idx]
+        cur = op.idx
+        while chain_next[cur] >= 0:
+            cur = chain_next[cur]
+            run.append(cur)
+        if len(run) >= threshold - 1:  # n ops reduce n+1 leaves
+            chains.append(run)
+            for i in run:
+                in_chain[i] = True
+
+    tail_to_chain = {run[-1]: run for run in chains}
+    rw = Rewriter(g)
+    for op in g.ops:
+        if in_chain[op.idx] and op.idx not in tail_to_chain:
+            continue  # interior chain op: dropped, replaced at the tail
+        if op.idx in tail_to_chain:
+            run = tail_to_chain[op.idx]
+            opcode = op.opcode
+            # collect leaves in chain order
+            leaves: list[int] = []
+            chain_results = {g.ops[i].result for i in run}
+            first = g.ops[run[0]]
+            leaves.extend(first.args)
+            for i in run[1:]:
+                for a in g.ops[i].args:
+                    if a not in chain_results:
+                        leaves.append(a)
+            # balanced pairwise tree
+            level = leaves
+            while len(level) > 1:
+                nxt: list[int] = []
+                for i in range(0, len(level) - 1, 2):
+                    if len(level) == 2:
+                        # root of the tree takes over the chain's result id
+                        vid = rw.emit(opcode, (level[i], level[i + 1]),
+                                      nest=op.nest, rank=op.rank,
+                                      result=op.result)
+                    else:
+                        vid = rw.emit(opcode, (level[i], level[i + 1]),
+                                      nest=op.nest, rank=op.rank)
+                    nxt.append(vid)
+                if len(level) % 2:
+                    nxt.append(level[-1])
+                level = nxt
+            continue
+        rw.keep(op)
+    return rw.finish()
+
+
+def fmac_coalesce(g: Graph) -> Graph:
+    """addf(a, mulf(b, c)) with single-use mul -> fmac(b, c, a) (§3.2 item 3)."""
+    uses = g.use_counts()
+    muls: dict[int, Op] = {}
+    for op in g.ops:
+        if op.opcode == "mulf" and uses[op.result] == 1:
+            muls[op.result] = op
+    fused_muls: set[int] = set()
+    rw = Rewriter(g)
+    for op in g.ops:
+        if op.idx in fused_muls:
+            continue
+        if op.opcode == "addf":
+            a0, a1 = op.args
+            mul = None
+            addend = None
+            if a1 in muls:
+                mul, addend = muls[a1], a0
+            elif a0 in muls:
+                mul, addend = muls[a0], a1
+            if mul is not None:
+                rw.emit("fmac", (mul.args[0], mul.args[1], addend),
+                        nest=op.nest, rank=op.rank, result=op.result)
+                fused_muls.add(mul.idx)
+                continue
+        rw.keep(op)
+    out = rw.finish()
+    return dce(out)
+
+
+def hoist_globals_check(g: Graph) -> None:
+    """Verify weights live at the interface, not inline (paper §3.2 item 1).
+
+    In this implementation hoisting happens by construction (the frontend
+    declares weights as interface memrefs), so the pass is an assertion:
+    every weight name must appear in ``graph.inputs``.
+    """
+    for name in g.weight_names:
+        if name not in g.inputs:
+            raise AssertionError(f"weight {name} not hoisted to interface")
+
+
+DEFAULT_PIPELINE = ("cse", "relu_recompose", "reduction_tree",
+                    "fmac_coalesce", "dce")
+
+
+def optimize(g: Graph, *, pipeline: Sequence[str] = DEFAULT_PIPELINE,
+             tree_threshold: int = 4, max_rounds: int = 4) -> Graph:
+    """Run the standard pass pipeline to a fixpoint (the OpenHLS 'opt' flow).
+
+    Iterated because passes expose each other's opportunities (e.g. DCE
+    drops a second use of a mul, enabling FMAC coalescing next round).
+    """
+    hoist_globals_check(g)
+    for _ in range(max_rounds):
+        before = len(g.ops)
+        for name in pipeline:
+            if name == "cse":
+                g = cse(g)
+            elif name == "relu_recompose":
+                g = relu_recompose(g)
+            elif name == "reduction_tree":
+                g = reduction_tree(g, threshold=tree_threshold)
+            elif name == "fmac_coalesce":
+                g = fmac_coalesce(g)
+            elif name == "dce":
+                g = dce(g)
+            else:
+                raise ValueError(f"unknown pass {name}")
+        if len(g.ops) == before:
+            break
+    return g

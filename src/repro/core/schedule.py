@@ -1,0 +1,312 @@
+"""Resource-constrained list scheduling (paper §3.3).
+
+The paper's observation: in the resource-unconstrained case the scheduling
+ILP's constraint matrix is totally unimodular, so an LP (equivalently, a
+longest-path/ASAP computation) solves it optimally; resource constraints are
+folded in as *precedence* constraints by fixing a linear order on the
+operations bound to each resource.  OpenHLS derives resource capacity from
+the explicit parallelism of scf.parallel nests:  K_i = |parallel iteration
+space of nest i| functional units serve nest i, and K = max_i K_i units of
+each class exist in the design.
+
+Two binding disciplines are implemented:
+
+  * ``binding="pool"``  (default, OpenHLS mode) — per-class pools of K units;
+    each op in program order grabs the earliest-free unit.  Equivalent to
+    list scheduling with the paper's capacity bound, and the discipline that
+    reproduces the paper's interval counts.
+  * ``binding="rank"``  — static binding of parallel instance ``rank`` to
+    unit ``rank mod lanes``; this is the stricter literal reading of the
+    linear-order construction and also serves, with small ``unroll_factor``,
+    as the conventional-HLS (Vitis) baseline model of §4.1.
+
+A final ALAP compaction retimes ops as late as their consumers and unit
+successors allow (paper: ALAP "amongst the subtrees" of reduction trees),
+which shortens register lifetimes — the FF-usage analogue.
+
+Terminology mirrors the paper's evaluation: the *interval count* is the
+makespan in clock cycles; end-to-end latency = interval count x achieved
+clock period (10 ns target).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+from repro.core.ir import DEFAULT_DELAYS, RESOURCE_CLASS, Graph
+
+CLOCK_NS = 10.0  # paper §4: all designs synthesised for a 10 ns target clock
+
+
+@dataclasses.dataclass
+class Schedule:
+    """A fully scheduled design."""
+
+    start: list[int]                      # per-op start cycle
+    makespan: int                         # interval count
+    resource_units: dict[str, int]        # units instantiated per class
+    nest_spans: dict[int, tuple[int, int]]  # nest -> (min start, max end)
+    peak_live: int                        # peak # of live values (FF analogue)
+    n_ops: int
+
+    @property
+    def latency_us(self) -> float:
+        return self.makespan * CLOCK_NS * 1e-3
+
+    def resources(self) -> dict[str, int]:
+        """FPGA-resource analogues (paper Fig. 4 bars).
+
+        DSP  <- mul/add/mac/div/sqrt units
+        LUT  <- cmp/select/relu units (combinational logic)
+        FF   <- peak live values (registered symbols)
+        BRAM <- arrays with surviving load/store traffic (0 in forwarding
+                mode — the paper's headline resource result)
+        """
+        dsp = sum(n for c, n in self.resource_units.items()
+                  if c in ("mul", "add", "mac", "div", "sqrt"))
+        lut = sum(n for c, n in self.resource_units.items() if c == "cmp")
+        bram = sum(n for c, n in self.resource_units.items() if c == "port")
+        return {"DSP": dsp, "LUT_units": lut, "FF": self.peak_live,
+                "BRAM_ports": bram}
+
+
+class _UnitPool:
+    """Earliest-free-unit allocator with lazy instantiation up to capacity."""
+
+    __slots__ = ("capacity", "heap", "allocated")
+
+    def __init__(self, capacity: int):
+        self.capacity = max(1, capacity)
+        self.heap: list[tuple[int, int]] = []  # (free_time, unit_id)
+        self.allocated = 0
+
+    def acquire(self, t_ready: int, occupancy: int) -> tuple[int, int]:
+        """Returns (start_time, unit_id)."""
+        if self.heap and self.heap[0][0] <= t_ready:
+            _, uid = heapq.heappop(self.heap)
+            start = t_ready
+        elif self.allocated < self.capacity:
+            uid = self.allocated
+            self.allocated += 1
+            start = t_ready
+        else:
+            free, uid = heapq.heappop(self.heap)
+            start = max(free, t_ready)
+        heapq.heappush(self.heap, (start + occupancy, uid))
+        return start, uid
+
+
+def list_schedule(
+    g: Graph,
+    *,
+    binding: str = "pool",
+    unroll_factor: Optional[int] = None,
+    ports_per_array: int = 2,
+    pipelined_units: bool = False,
+    delays: Optional[dict[str, int]] = None,
+    alap_compact: bool = True,
+) -> Schedule:
+    """Schedule ``g``.
+
+    binding:
+        "pool" — OpenHLS mode (per-class capacity K = max_i K_i, or
+        ``unroll_factor`` when given).
+        "rank" — static rank binding (paper's literal linear-order form).
+    unroll_factor:
+        caps per-class capacity (models a k-fold unrolled conventional-HLS
+        design, paper §4.1); ``None`` = the design's own K.
+    ports_per_array:
+        memory ports per array for surviving load/store ops (baseline mode).
+    pipelined_units:
+        if True, units have initiation interval 1 (FloPoCo cores are fully
+        pipelined); if False, a unit is busy for the op's full delay —
+        matching the paper's precedence-constraint transformation
+        (start_a + delay_a <= start_b, footnote 2).
+    """
+    assert binding in ("pool", "rank"), binding
+    delays = delays or DEFAULT_DELAYS
+    n = len(g.ops)
+    start = [0] * n
+    ready_at = [0] * g.n_values
+    keys: list[Optional[tuple]] = [None] * n  # op -> (class, unit) binding
+
+    K = g.K() if unroll_factor is None else max(1, unroll_factor)
+    pools: dict[str, _UnitPool] = {}
+    port_pools: dict[str, _UnitPool] = {}
+    unit_free: dict[tuple, int] = {}   # rank-binding mode
+    units_used: dict[str, set] = {}
+
+    for op in g.ops:
+        d = delays.get(op.opcode, 0)
+        occ = 1 if pipelined_units else max(d, 1)
+        t = 0
+        for a in op.args:
+            ta = ready_at[a]
+            if ta > t:
+                t = ta
+        cls = RESOURCE_CLASS.get(op.opcode)
+        if cls == "port":
+            pool = port_pools.get(op.array)
+            if pool is None:
+                pool = port_pools[op.array] = _UnitPool(ports_per_array)
+            t, uid = pool.acquire(t, occ)
+            keys[op.idx] = ("port", op.array, uid)
+            units_used.setdefault("port", set()).add((op.array, uid))
+        elif cls is not None:
+            if binding == "pool":
+                pool = pools.get(cls)
+                if pool is None:
+                    pool = pools[cls] = _UnitPool(K)
+                t, uid = pool.acquire(t, occ)
+                keys[op.idx] = (cls, uid)
+                units_used.setdefault(cls, set()).add(uid)
+            else:
+                k_i = g.nest_parallel_space.get(op.nest, 1)
+                lanes = k_i if unroll_factor is None else max(
+                    1, min(unroll_factor, k_i))
+                rank = op.rank if op.rank >= 0 else 0
+                key = (cls, rank % lanes)
+                tf = unit_free.get(key, 0)
+                if tf > t:
+                    t = tf
+                unit_free[key] = t + occ
+                keys[op.idx] = key
+                units_used.setdefault(cls, set()).add(key)
+        start[op.idx] = t
+        if op.result >= 0:
+            ready_at[op.result] = t + d
+
+    makespan = 0
+    for op in g.ops:
+        end = start[op.idx] + delays.get(op.opcode, 0)
+        if end > makespan:
+            makespan = end
+
+    if alap_compact:
+        start = _alap_compact(g, start, makespan, delays, pipelined_units,
+                              keys)
+
+    nest_spans: dict[int, tuple[int, int]] = {}
+    for op in g.ops:
+        s = start[op.idx]
+        e = s + delays.get(op.opcode, 0)
+        lo, hi = nest_spans.get(op.nest, (s, e))
+        nest_spans[op.nest] = (min(lo, s), max(hi, e))
+
+    peak_live = _peak_live_values(g, start, delays)
+    units = {c: len(k) for c, k in units_used.items()}
+    return Schedule(start=start, makespan=makespan, resource_units=units,
+                    nest_spans=nest_spans, peak_live=peak_live, n_ops=n)
+
+
+def _alap_compact(g: Graph, start: list[int], makespan: int,
+                  delays: dict[str, int], pipelined_units: bool,
+                  keys: list[Optional[tuple]]) -> list[int]:
+    """Retime ops as late as possible without growing the makespan.
+
+    Implements the paper's ALAP scheduling "amongst the subtrees" of
+    reduction trees — applied to every op, which subsumes it.  Safety: an op
+    keeps its unit assignment and may not move past the next op scheduled on
+    the same unit, so the forward schedule's resource feasibility and
+    program order per unit are preserved.
+    """
+    new_start = list(start)
+    latest = [makespan] * g.n_values
+    next_same_key: dict[int, int] = {}
+    last_seen: dict[tuple, int] = {}
+    for op in reversed(g.ops):
+        k = keys[op.idx]
+        if k is not None:
+            if k in last_seen:
+                next_same_key[op.idx] = last_seen[k]
+            last_seen[k] = op.idx
+    for op in reversed(g.ops):
+        d = delays.get(op.opcode, 0)
+        limit = makespan - d
+        if op.result >= 0:
+            limit = min(limit, latest[op.result] - d)
+        nxt = next_same_key.get(op.idx)
+        if nxt is not None:
+            occupancy = 1 if pipelined_units else max(d, 1)
+            limit = min(limit, new_start[nxt] - occupancy)
+        t = new_start[op.idx]
+        if limit > t:
+            t = limit
+        new_start[op.idx] = t
+        for a in op.args:
+            if t < latest[a]:
+                latest[a] = t
+    return new_start
+
+
+def _peak_live_values(g: Graph, start: list[int],
+                      delays: dict[str, int]) -> int:
+    """Peak number of simultaneously live values — the FF-usage analogue."""
+    last_use: dict[int, int] = {}
+    born: dict[int, int] = {}
+    for op in g.ops:
+        if op.result >= 0:
+            born[op.result] = start[op.idx] + delays.get(op.opcode, 0)
+        for a in op.args:
+            t = start[op.idx]
+            if last_use.get(a, -1) < t:
+                last_use[a] = t
+    events: list[tuple[int, int]] = []
+    for vid, b in born.items():
+        e = last_use.get(vid)
+        if e is None or e < b:
+            continue
+        events.append((b, 1))
+        events.append((e + 1, -1))
+    events.sort()
+    live = peak = 0
+    for _, delta in events:
+        live += delta
+        if live > peak:
+            peak = live
+    return peak
+
+
+def partition_stages(g: Graph, sched: Schedule, n_stages: int
+                     ) -> tuple[list[list[int]], int]:
+    """Partition nests (in program order) into pipeline stages.
+
+    Returns (stages as lists of nest ids, initiation interval = longest
+    stage span).  This reproduces the paper's BraggNN deployment: a 3-stage
+    pipeline whose throughput is set by the longest stage (480 intervals in
+    the paper).  DP over contiguous partitions minimising the max stage span.
+    """
+    nests = sorted(sched.nest_spans, key=lambda t: sched.nest_spans[t][0])
+    if not nests:
+        return [[]], 0
+    spans = [sched.nest_spans[t] for t in nests]
+    m = len(nests)
+    n_stages = min(n_stages, m)
+
+    def stage_cost(i: int, j: int) -> int:  # nests i..j inclusive
+        lo = min(s for s, _ in spans[i:j + 1])
+        hi = max(e for _, e in spans[i:j + 1])
+        return hi - lo
+
+    INF = float("inf")
+    dp = [[INF] * (m + 1) for _ in range(n_stages + 1)]
+    cut = [[0] * (m + 1) for _ in range(n_stages + 1)]
+    dp[0][0] = 0
+    for s in range(1, n_stages + 1):
+        for j in range(1, m + 1):
+            for i in range(s - 1, j):
+                c = max(dp[s - 1][i], stage_cost(i, j - 1))
+                if c < dp[s][j]:
+                    dp[s][j] = c
+                    cut[s][j] = i
+    stages: list[list[int]] = []
+    j = m
+    for s in range(n_stages, 0, -1):
+        i = cut[s][j]
+        stages.append(nests[i:j])
+        j = i
+    stages.reverse()
+    ii = int(dp[n_stages][m])
+    return stages, ii

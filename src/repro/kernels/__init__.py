@@ -1,0 +1,13 @@
+"""Pallas TPU kernels (+ jnp oracles) for the perf-critical compute.
+
+Each kernel directory holds:
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target;
+              validated via interpret=True on CPU)
+  ops.py    — the jit'd public wrapper (oracle fallback off-TPU)
+  ref.py    — the pure-jnp oracle
+
+smallfloat_matmul — reduced-precision MAC array (paper §4.2)
+conv2d_vmem       — weights-resident BraggNN conv (paper's no-BRAM result)
+flash_attention   — blockwise attention (32k prefill path)
+fused_softmax     — fused softmax incl. Taylor-exp mode (paper §3/§4.1)
+"""

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: weights-resident direct convolution (BraggNN path).
+
+The paper's headline resource result is that at (5,4)/(5,3) precision the
+*entire* BraggNN weight set fits in registers/LUTs — no BRAM.  The TPU
+analogue: all conv weights live in VMEM for the kernel's lifetime (~59 KB
+at s=1), the batch streams through in blocks, and each (kh, kw) tap is one
+MXU contraction over input channels.  Valid padding, stride 1, NCHW —
+matching the loop-nest semantics of ``repro.core.frontend.conv2d``.
+
+Grid: (B / bb,).  Per step: x block (bb, Cin, H, W) + full weights ->
+out block (bb, Cout, Ho, Wo).  Optional fused ReLU and (wE,wF) weight
+quantisation (performed in VMEM, the FloPoCo discipline).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.smallfloat_matmul.smallfloat_matmul import _quantize_block
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, fmt, fuse_relu):
+    x = x_ref[...].astype(jnp.float32)            # (bb, Cin, H, W)
+    w = w_ref[...].astype(jnp.float32)            # (Cout, Cin, kh, kw)
+    if fmt is not None:
+        x = _quantize_block(x, *fmt)
+        w = _quantize_block(w, *fmt)
+    bb, cin, h, wdim = x.shape
+    cout = w.shape[0]
+    ho, wo = h - kh + 1, wdim - kw + 1
+    acc = jnp.zeros((bb, cout, ho, wo), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, :, i:i + ho, j:j + wo]   # (bb, Cin, Ho, Wo)
+            tap = w[:, :, i, j]                   # (Cout, Cin)
+            acc = acc + jax.lax.dot_general(
+                tap, patch.reshape(bb, cin, ho * wo),
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).transpose(1, 0, 2).reshape(bb, cout, ho, wo)
+    if b_ref is not None:
+        acc = acc + b_ref[...].astype(jnp.float32)[None, :, None, None]
+    if fuse_relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _conv_kernel_nobias(x_ref, w_ref, o_ref, **kw):
+    _conv_kernel(x_ref, w_ref, None, o_ref, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "fmt", "fuse_relu", "bb", "interpret"))
+def conv2d_vmem(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+                *, fmt: Optional[tuple[int, int]] = None,
+                fuse_relu: bool = False, bb: int = 8,
+                interpret: bool = True) -> jax.Array:
+    """x: (B, Cin, H, W), w: (Cout, Cin, kh, kw), b: (Cout,) -> fp32."""
+    bsz, cin, h, wdim = x.shape
+    cout, cin2, kh, kw = w.shape
+    assert cin == cin2
+    bb = min(bb, bsz)
+    assert bsz % bb == 0, (bsz, bb)
+    ho, wo = h - kh + 1, wdim - kw + 1
+    grid = (bsz // bb,)
+
+    in_specs = [
+        pl.BlockSpec((bb, cin, h, wdim), lambda i: (i, 0, 0, 0)),
+        pl.BlockSpec((cout, cin, kh, kw), lambda i: (0, 0, 0, 0)),
+    ]
+    args = [x, w]
+    kernel = _conv_kernel_nobias
+    if b is not None:
+        in_specs.append(pl.BlockSpec((cout,), lambda i: (0,)))
+        args.append(b)
+        kernel = _conv_kernel
+    return pl.pallas_call(
+        functools.partial(kernel, kh=kh, kw=kw, fmt=fmt,
+                          fuse_relu=fuse_relu),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bb, cout, ho, wo), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, cout, ho, wo), jnp.float32),
+        interpret=interpret,
+    )(*args)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash attention kernel (flattened-heads layout)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        logit_cap: float = 0.0) -> jax.Array:
+    """q: (BH, Sq, D), k/v: (BH, Skv, D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(
+                       jnp.asarray(d, jnp.float32))
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    sq, skv = q.shape[1], k.shape[1]
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None and window > 0:
+        ok &= (qp - kp) < window
+    s = jnp.where(ok[None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)
+                      ).astype(q.dtype)

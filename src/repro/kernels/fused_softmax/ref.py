@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for fused_softmax."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def taylor_exp_ref(x: jax.Array, order: int, range_reduce: int) -> jax.Array:
+    y = x.astype(jnp.float32) / float(1 << range_reduce)
+    acc = jnp.ones_like(y)
+    term = jnp.ones_like(y)
+    for k in range(1, order + 1):
+        term = term * y / float(k)
+        acc = acc + term
+    for _ in range(range_reduce):
+        acc = acc * acc
+    return acc
+
+
+def fused_softmax_ref(x: jax.Array, *, taylor_order: int = 0,
+                      range_reduce: int = 2) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    z = xf - jnp.max(xf, axis=-1, keepdims=True)
+    e = (taylor_exp_ref(z, taylor_order, range_reduce) if taylor_order
+         else jnp.exp(z))
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(x.dtype)

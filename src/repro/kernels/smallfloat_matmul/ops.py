@@ -1,0 +1,23 @@
+"""Public jit'd wrapper for the smallfloat matmul kernel.
+
+``use_pallas=False`` (the CPU-container default) routes to the oracle;
+``use_pallas=True`` routes to the kernel (interpret mode off-TPU).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.smallfloat_matmul.ref import smallfloat_matmul_ref
+from repro.kernels.smallfloat_matmul.smallfloat_matmul import smallfloat_matmul
+
+
+def matmul(x: jax.Array, w: jax.Array, b=None, *, exp_bits: int = 5,
+           man_bits: int = 4, fuse_relu: bool = False,
+           use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+    if use_pallas:
+        return smallfloat_matmul(x, w, b, exp_bits=exp_bits,
+                                 man_bits=man_bits, fuse_relu=fuse_relu,
+                                 interpret=interpret)
+    return smallfloat_matmul_ref(x, w, b, exp_bits=exp_bits,
+                                 man_bits=man_bits, fuse_relu=fuse_relu)

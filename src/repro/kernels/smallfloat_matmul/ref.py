@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for smallfloat_matmul."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import FloatFormat, quantize
+
+
+def smallfloat_matmul_ref(x: jax.Array, w: jax.Array, b=None, *,
+                          exp_bits: int = 5, man_bits: int = 4,
+                          fuse_relu: bool = False) -> jax.Array:
+    fmt = FloatFormat(exp_bits, man_bits)
+    xq = quantize(x.astype(jnp.float32), fmt)
+    wq = quantize(w.astype(jnp.float32), fmt)
+    out = xq @ wq
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    if fuse_relu:
+        out = jnp.maximum(out, 0.0)
+    return out

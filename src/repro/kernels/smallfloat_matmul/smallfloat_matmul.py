@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: blocked matmul with on-the-fly FloPoCo (wE,wF)
+quantisation of both operands, fp32 MXU accumulation, optional fused bias
+and ReLU.
+
+This is the TPU rendering of the paper's reduced-precision MAC array
+(§4.2): operands are rounded to the (wE,wF) lattice *in VMEM* immediately
+before hitting the MXU, exactly as FloPoCo cores consume reduced-precision
+inputs, and the accumulator stays wide (fp32) like the DSP48 accumulator.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; the output block is revisited across
+the K dimension and accumulated in place (init at k==0), the canonical TPU
+matmul schedule.  Block shapes default to MXU-aligned (128, 128, 128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_block(x, exp_bits: int, man_bits: int):
+    """RNE quantisation to (wE,wF) with FTZ + saturation (fp32 in/out)."""
+    bias = (1 << (exp_bits - 1)) - 1
+    emax = bias
+    emin = 1 - bias
+    max_value = (2.0 - 2.0 ** (-man_bits)) * 2.0 ** emax
+    min_normal = 2.0 ** emin
+    sign = jnp.sign(x)
+    v = jnp.abs(x)
+    f, e = jnp.frexp(v)
+    m = f * 2.0
+    e = e - 1
+    scale = float(1 << man_bits)
+    q = jnp.round((m - 1.0) * scale)
+    carry = q >= scale
+    m_q = jnp.where(carry, 1.0, 1.0 + q / scale)
+    e_q = jnp.where(carry, e + 1, e)
+    out = sign * m_q * jnp.exp2(e_q.astype(jnp.float32))
+    out = jnp.where(v < min_normal * 0.5, 0.0, out)
+    out = jnp.where((v >= min_normal * 0.5) & (v < min_normal),
+                    sign * min_normal, out)
+    out = jnp.where(v > max_value, sign * max_value, out)
+    out = jnp.where(v == 0.0, x, out)
+    return out
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, exp_bits, man_bits,
+                   fuse_relu, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = _quantize_block(x_ref[...].astype(jnp.float32), exp_bits, man_bits)
+    w = _quantize_block(w_ref[...].astype(jnp.float32), exp_bits, man_bits)
+    o_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        acc = o_ref[...]
+        if b_ref is not None:
+            acc = acc + b_ref[...].astype(jnp.float32)
+        if fuse_relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "exp_bits", "man_bits", "fuse_relu", "bm", "bn", "bk", "interpret"))
+def smallfloat_matmul(x: jax.Array, w: jax.Array, b=None, *,
+                      exp_bits: int = 5, man_bits: int = 4,
+                      fuse_relu: bool = False, bm: int = 128, bn: int = 128,
+                      bk: int = 128, interpret: bool = True) -> jax.Array:
+    """x: (M, K), w: (K, N), b: (N,) or None  ->  (M, N) fp32."""
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, kdim)
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (
+        "dims must tile evenly", (m, n, kdim), (bm, bn, bk))
+    n_k = kdim // bk
+    grid = (m // bm, n // bn, n_k)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+    args = [x, w]
+    if b is not None:
+        # bias kept 2-D: TPU VMEM tiles are (sublane, lane)-shaped
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        args.append(b.reshape(1, n))
+
+    kernel = functools.partial(
+        _matmul_kernel if b is not None else _matmul_kernel_nobias,
+        exp_bits=exp_bits, man_bits=man_bits, fuse_relu=fuse_relu, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(*args)
+
+
+def _matmul_kernel_nobias(x_ref, w_ref, o_ref, **kw):
+    _matmul_kernel(x_ref, w_ref, None, o_ref, **kw)

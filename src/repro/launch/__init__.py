@@ -1,0 +1,8 @@
+"""Launch layer: mesh construction, shardings, step factories, dry-run,
+roofline analysis, training/serving drivers.
+
+NOTE: ``repro.launch.dryrun`` sets XLA_FLAGS (512 host devices) at import —
+only import it in dedicated dry-run processes.
+"""
+
+from repro.launch import mesh, shardings, steps  # noqa: F401

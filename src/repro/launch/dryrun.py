@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh).
+
+The first two lines above MUST stay first: jax locks the device count at
+first initialisation, and the production meshes need 512 placeholder CPU
+devices.  (Smoke tests and benches do NOT import this module; they see one
+device.)
+
+For every supported cell this driver:
+  1. builds the step function (train_step / prefill / serve_step),
+  2. resolves in/out shardings from the logical axes (core.binding K_i rule),
+  3. ``.lower().compile()`` on the requested mesh — success is the deliverable,
+  4. records ``memory_analysis()`` (fits-per-device proof),
+     ``cost_analysis()`` (XLA's own per-device estimate),
+     and the trip-count-corrected HLO inventory (dot FLOPs, collective
+     bytes by kind) from ``compiled.as_text()`` — the §Roofline inputs,
+  5. writes one JSON per cell under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both
+  python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k --mesh single
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, supports_shape
+from repro.launch import hlo_parse, shardings as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_prefill, make_serve_step, make_train_step
+from repro.nn import module as module_lib, transformer
+from repro.models import encdec
+from repro.optim import adamw
+
+
+def _cache_abstract_and_shardings(cfg, shape, mesh, rules):
+    if getattr(cfg, "is_encoder_decoder", False):
+        abstract = encdec.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        axes = encdec.cache_axes(cfg)
+    else:
+        abstract = transformer.cache_specs(cfg, shape.global_batch,
+                                           shape.seq_len)
+        axes = transformer.cache_axes(cfg)
+    return abstract, sh.tree_shardings(abstract, axes, mesh, rules)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               cfg=None, opt_overrides=None):
+    """Returns (step_fn, abstract_args tuple, in_shardings, out_shardings)."""
+    cfg = cfg or registry.get_config(arch)
+    shape = registry.get_shape(shape_name)
+    rules = sh.rules_for(cfg)
+
+    # pin activation batch sharding (see ModelConfig.batch_mesh_axes);
+    # for train, the per-microbatch batch is what must divide the axes
+    eff_batch = shape.global_batch
+    if shape.kind == "train":
+        eff_batch //= max(1, getattr(cfg, "microbatches", 1))
+    bspec = sh.prune_spec((eff_batch,),
+                          rules.spec(("batch",), mesh), mesh)
+    if bspec and bspec[0] is not None:
+        entry = bspec[0]
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        cfg = cfg.replace(batch_mesh_axes=axes)
+    if getattr(cfg, "seq_shard_train", False) and shape.kind == "train" \
+            and shape.seq_len % mesh.shape.get("model", 1) == 0:
+        cfg = cfg.replace(seq_mesh_axes=("model",))
+
+    abstract_params, param_sh = sh.model_param_shardings(cfg, mesh)
+    if getattr(cfg, "serve_dtype", "") and shape.kind in ("prefill",
+                                                          "decode"):
+        sd = jnp.dtype(cfg.serve_dtype)
+        abstract_params = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, sd)
+            if jnp.issubdtype(a.dtype, jnp.floating) else a,
+            abstract_params)
+    inputs = registry.input_specs(cfg, shape)
+    in_axes = registry.input_axes(cfg, shape)
+    input_sh = {k: sh.sharding_for(tuple(v.shape), in_axes[k], mesh, rules)
+                for k, v in inputs.items()}
+
+    if shape.kind == "train":
+        n_micro = max(1, getattr(cfg, "microbatches", 1))
+        # mesh-aware: the per-microbatch batch must stay divisible by the
+        # data-parallel ways, else pruning drops the batch sharding and
+        # every device sees the whole microbatch (measured on gemma2 multi)
+        dp_ways = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+        while n_micro > 1 and (shape.global_batch // n_micro) % dp_ways:
+            n_micro //= 2
+        cfg = cfg.replace(microbatches=n_micro)
+        micro_sh = None
+        if n_micro > 1:
+            micro_sh = {
+                k: sh.sharding_for(
+                    (n_micro, v.shape[0] // n_micro) + tuple(v.shape[1:]),
+                    (None,) + tuple(in_axes[k]), mesh, rules)
+                for k, v in inputs.items()}
+        if getattr(cfg, "is_encoder_decoder", False):
+            specs = encdec.model_specs(cfg)
+        else:
+            specs = transformer.model_specs(cfg)
+        axes = module_lib.axes_tree(specs)
+        opt_abs = adamw.abstract_state(abstract_params)
+        opt_axes = adamw.state_axes(axes)
+        opt_sh = sh.tree_shardings(opt_abs, opt_axes, mesh, rules)
+        step = make_train_step(cfg, microbatch_shardings=micro_sh,
+                               grad_shardings=opt_sh["mu"])
+        args = (abstract_params, opt_abs, inputs)
+        in_shardings = (param_sh, opt_sh, input_sh)
+        out_abs = jax.eval_shape(step, *args)
+        metrics_sh = jax.tree_util.tree_map(
+            lambda _: sh.replicated(mesh), out_abs[2])
+        out_shardings = (param_sh, opt_sh, metrics_sh)
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        step = make_prefill(cfg)
+        args = (abstract_params, inputs)
+        in_shardings = (param_sh, input_sh)
+        vocab_sh = sh.sharding_for(
+            (shape.global_batch, cfg.vocab_size), ("batch", "vocab"),
+            mesh, rules)
+        out_shardings = vocab_sh
+        donate = ()
+    else:  # decode
+        step = make_serve_step(cfg)
+        cache_abs, cache_sh = _cache_abstract_and_shardings(
+            cfg, shape, mesh, rules)
+        args = (abstract_params, cache_abs, inputs)
+        in_shardings = (param_sh, cache_sh, input_sh)
+        tok_sh = sh.sharding_for((shape.global_batch,), ("batch",), mesh,
+                                 rules)
+        out_shardings = (tok_sh, cache_sh)
+        donate = (1,)
+    return step, args, in_shardings, out_shardings, donate
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: pathlib.Path, *, cfg=None, tag: str = "") -> dict:
+    shape = registry.get_shape(shape_name)
+    base_cfg = cfg or registry.get_config(arch)
+    ok, why = supports_shape(base_cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "supported": ok, "skip_reason": why, "tag": tag}
+    if not ok:
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.perf_counter()
+    try:
+        with jax.set_mesh(mesh):  # P-based constraints need a context
+            step, args, in_sh, out_sh, donate = build_cell(
+                arch, shape_name, mesh, cfg=cfg)
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis() or {}
+            text = compiled.as_text()
+        hlo = hlo_parse.analyze(text)
+        params_bytes = sh.bytes_per_device(args[0], in_sh[0])
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+            },
+            "params_bytes_per_device": params_bytes,
+            "cost_analysis": {
+                "flops_raw": float(cost.get("flops", 0.0)),
+                "bytes_accessed_raw": float(cost.get("bytes accessed", 0.0)),
+            },
+            "hlo": {
+                "dot_flops_per_device": hlo.dot_flops,
+                "collective_bytes_per_device": hlo.collective_bytes,
+                "collectives_by_kind": hlo.by_kind(),
+                "n_collective_ops": len(hlo.collectives),
+                "n_while": hlo.n_while,
+                "trip_counts": hlo.trip_counts,
+                "hlo_chars": len(text),
+            },
+        })
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        rec.update({"status": "error", "error": repr(e),
+                    "traceback": traceback.format_exc()[-4000:]})
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = out_dir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = registry.ARCH_IDS if args.arch == "all" else (args.arch,)
+    shapes = tuple(SHAPES) if args.shape == "all" else (args.shape,)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    out_dir = pathlib.Path(args.out)
+
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                path = out_dir / f"{arch}__{shape_name}__{mesh_kind}.json"
+                if args.skip_existing and path.exists():
+                    prev = json.loads(path.read_text())
+                    if prev.get("status") == "ok" or not prev.get("supported", True):
+                        continue
+                rec = run_cell(arch, shape_name, mesh_kind, out_dir)
+                status = rec.get("status", "skipped")
+                if not rec.get("supported", True):
+                    n_skip += 1
+                    print(f"[skip] {arch} x {shape_name} x {mesh_kind}: "
+                          f"{rec['skip_reason']}", flush=True)
+                elif status == "ok":
+                    n_ok += 1
+                    print(f"[ ok ] {arch} x {shape_name} x {mesh_kind}: "
+                          f"compile {rec['compile_s']}s, "
+                          f"dotTF/dev {rec['hlo']['dot_flops_per_device']/1e12:.3f}, "
+                          f"collMB/dev {rec['hlo']['collective_bytes_per_device']/1e6:.1f}, "
+                          f"temp {rec['memory']['temp_bytes']/1e9:.2f} GB",
+                          flush=True)
+                else:
+                    n_err += 1
+                    print(f"[FAIL] {arch} x {shape_name} x {mesh_kind}: "
+                          f"{rec['error']}", flush=True)
+    print(f"done: {n_ok} ok, {n_err} failed, {n_skip} skipped", flush=True)
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

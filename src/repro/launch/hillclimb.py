@@ -1,0 +1,129 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimbing driver (§Perf): run tagged config variants of the three
+chosen cells through the dry-run, so every hypothesis -> change -> measure
+cycle leaves a JSON artifact next to its baseline.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell stablelm_train
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell all
+"""
+
+import argparse
+import json
+import pathlib
+
+from repro.configs import registry
+
+
+def _variants_stablelm_train():
+    """Most collective-bound cell: stablelm-3b train_4k (TP activation
+    all-reduces dominate)."""
+    base = registry.get_config("stablelm-3b")
+    return "stablelm-3b", "train_4k", [
+        ("bf16reduce", base.replace(bf16_reduce=True)),
+        ("dotsremat", base.replace(remat="dots")),
+        ("sp", base.replace(seq_shard_train=True)),
+        ("bf16reduce_dots", base.replace(bf16_reduce=True, remat="dots")),
+        ("bf16reduce_sp", base.replace(bf16_reduce=True,
+                                       seq_shard_train=True)),
+        ("bf16reduce_sp_dots", base.replace(
+            bf16_reduce=True, seq_shard_train=True, remat="dots")),
+        # round 2: keep the dots win, pay for it with more microbatches
+        ("dots_mb8", base.replace(remat="dots", microbatches=8)),
+        ("dots_mb8_sp", base.replace(remat="dots", microbatches=8,
+                                     seq_shard_train=True)),
+    ]
+
+
+def _variants_rg_long():
+    """Paper-representative cell: recurrentgemma-9b long_500k — low-latency
+    inference bound by weight streaming; the paper's reduced-precision
+    insight is exactly the lever."""
+    base = registry.get_config("recurrentgemma-9b")
+    return "recurrentgemma-9b", "long_500k", [
+        ("bf16serve", base.replace(serve_dtype="bfloat16")),
+        ("bf16serve_q54", base.replace(serve_dtype="bfloat16",
+                                       quant_format="5_4")),
+    ]
+
+
+def _variants_moe_train():
+    """Worst useful-FLOPs ratio among train cells: qwen2-moe-a2.7b train_4k
+    (dispatch + shared-expert overhead on top of a small active core)."""
+    base = registry.get_config("qwen2-moe-a2.7b")
+    return "qwen2-moe-a2.7b", "train_4k", [
+        ("bf16reduce", base.replace(bf16_reduce=True)),
+        ("cap10", base.replace(capacity_factor=1.0)),
+        ("chunk8", base.replace(moe_token_chunks=8)),
+        ("bf16reduce_cap10", base.replace(bf16_reduce=True,
+                                          capacity_factor=1.0)),
+        # round 2: dots remat on top of the capacity win
+        ("cap10_dots", base.replace(capacity_factor=1.0, remat="dots")),
+        ("cap10_mb8", base.replace(capacity_factor=1.0, microbatches=8)),
+        # round 3: combine the two confirmed wins, paying dots' memory
+        # with more microbatches
+        ("cap10_dots_mb8", base.replace(capacity_factor=1.0, remat="dots",
+                                        microbatches=8)),
+    ]
+
+
+CELLS = {
+    "stablelm_train": _variants_stablelm_train,
+    "rg_long": _variants_rg_long,
+    "moe_train": _variants_moe_train,
+}
+
+
+def summarize(out_dir: pathlib.Path, arch: str, shape: str) -> None:
+    from repro.launch import roofline as rl
+    base_p = out_dir / f"{arch}__{shape}__single.json"
+    rows = []
+    for p in sorted(out_dir.glob(f"{arch}__{shape}__single*.json")):
+        d = json.loads(p.read_text())
+        if d.get("status") != "ok":
+            rows.append((d.get("tag") or "baseline", None, None, None))
+            continue
+        tag = d.get("tag") or "baseline"
+        coll = d["hlo"]["collective_bytes_per_device"]
+        dot = d["hlo"]["dot_flops_per_device"]
+        mem = d["memory"]
+        peak = (mem["argument_bytes"] + mem["temp_bytes"]
+                + mem["output_bytes"] - mem["alias_bytes"]) / 1e9
+        rows.append((tag, dot / rl.PEAK_FLOPS, coll / rl.LINK_BW, peak))
+    print(f"\n== {arch} x {shape} ==")
+    print(f"{'variant':24s} {'compute_s':>10s} {'coll_s':>10s} {'peakGB':>8s}")
+    for tag, c, l, p in rows:
+        if c is None:
+            print(f"{tag:24s}  FAILED")
+        else:
+            print(f"{tag:24s} {c:10.4f} {l:10.4f} {p:8.2f}")
+    del base_p
+
+
+def main() -> None:
+    from repro.launch.dryrun import run_cell
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all", choices=list(CELLS) + ["all"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--summarize-only", action="store_true")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    names = list(CELLS) if args.cell == "all" else [args.cell]
+    for name in names:
+        arch, shape, variants = CELLS[name]()
+        if not args.summarize_only:
+            for tag, cfg in variants:
+                path = out_dir / f"{arch}__{shape}__single__{tag}.json"
+                if path.exists() and \
+                        json.loads(path.read_text()).get("status") == "ok":
+                    continue
+                rec = run_cell(arch, shape, "single", out_dir, cfg=cfg,
+                               tag=tag)
+                status = rec.get("status")
+                print(f"[{status}] {arch} x {shape} [{tag}]", flush=True)
+        summarize(out_dir, arch, shape)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,258 @@
+"""Optimized-HLO text analysis: collective inventory and dot-FLOP counting
+with while-loop trip-count correction.
+
+XLA's ``cost_analysis()`` visits each ``while`` body exactly once, so any
+cost inside a scanned layer stack or a blockwise-attention loop is
+undercounted by its trip count.  scan lowers to a while whose *condition*
+compares the induction variable against a compile-time constant, so the
+trip count is recoverable from the condition computation's ``constant(N)``.
+We build the computation call-graph, propagate multipliers through nested
+whiles, and weight every collective (and every dot) by the product of
+enclosing trip counts.
+
+Cost model per collective (per-device bytes on the wire, ring algorithms,
+(k-1)/k ~ 1):
+    all-reduce        2 x operand bytes
+    all-gather        1 x result bytes
+    reduce-scatter    1 x operand bytes
+    all-to-all        1 x operand bytes
+    collective-permute 1 x operand bytes
+Shapes in partitioned HLO are already per-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_COLL_COST = {"all-reduce": ("operand", 2.0), "all-gather": ("result", 1.0),
+              "reduce-scatter": ("operand", 1.0),
+              "all-to-all": ("operand", 1.0),
+              "collective-permute": ("operand", 1.0)}
+
+
+def _shape_bytes(type_str: str) -> int:
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    computation: str
+    result_bytes: int
+    operand_bytes: int
+    multiplier: float
+    replica_group_size: int
+
+    @property
+    def wire_bytes(self) -> float:
+        which, factor = _COLL_COST[self.kind]
+        base = self.operand_bytes if which == "operand" else self.result_bytes
+        return factor * base * self.multiplier
+
+
+@dataclasses.dataclass
+class HloReport:
+    collectives: list
+    dot_flops: float              # per-device, trip-count corrected
+    collective_bytes: float       # per-device wire bytes, corrected
+    n_while: int
+    trip_counts: dict
+
+    def by_kind(self) -> dict:
+        out: dict[str, float] = {}
+        for c in self.collectives:
+            out[c.kind] = out.get(c.kind, 0.0) + c.wire_bytes
+        return out
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if line and not line[0].isspace():
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = [line]        # keep header: parameter types
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _entry_name(text: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)\s*\(", text, re.M)
+    return m.group(1) if m else None
+
+
+_WHILE_RE = re.compile(
+    r"while\(.*?\)\s*,\s*condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(
+    r"(?:fusion|call|custom-call)\(.*?(?:to_apply|calls)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _trip_count(comps: dict, cond: str) -> float:
+    """Largest integer constant in the condition computation (the bound)."""
+    best = 1
+    for line in comps.get(cond, []):
+        for m in _CONST_RE.finditer(line):
+            v = int(m.group(1))
+            if v > best:
+                best = v
+    return float(best)
+
+
+def analyze(text: str) -> HloReport:
+    comps = _split_computations(text)
+    entry = _entry_name(text)
+    multipliers: dict[str, float] = {}
+    trip_counts: dict[str, float] = {}
+    n_while = 0
+
+    # propagate multipliers from entry through calls and whiles (BFS)
+    from collections import deque
+    start = entry if entry in comps else (next(iter(comps)) if comps else None)
+    if start is None:
+        return HloReport([], 0.0, 0.0, 0, {})
+    multipliers[start] = 1.0
+    queue = deque([start])
+    seen = set()
+    while queue:
+        name = queue.popleft()
+        if name in seen:
+            continue
+        seen.add(name)
+        mult = multipliers.get(name, 1.0)
+        for line in comps.get(name, []):
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.groups()
+                n_while += 1
+                tc = _trip_count(comps, cond)
+                trip_counts[body] = tc
+                for target, m in ((body, mult * tc), (cond, mult * tc)):
+                    if m > multipliers.get(target, 0.0):
+                        multipliers[target] = m
+                        seen.discard(target)
+                        queue.append(target)
+                continue
+            cm = _CALL_RE.search(line)
+            if cm:
+                target = cm.group(1)
+                if mult > multipliers.get(target, 0.0):
+                    multipliers[target] = mult
+                    seen.discard(target)
+                    queue.append(target)
+        # also catch reducers etc: to_apply=%name anywhere
+        for line in comps.get(name, []):
+            for m2 in re.finditer(r"to_apply=%?([\w.\-]+)", line):
+                target = m2.group(1)
+                if mult > multipliers.get(target, 0.0):
+                    multipliers[target] = mult
+                    seen.discard(target)
+                    queue.append(target)
+
+    collectives: list[CollectiveOp] = []
+    dot_flops = 0.0
+    for name, lines in comps.items():
+        mult = multipliers.get(name, 1.0)
+        # symbol table: %instr name -> result type (incl. computation params)
+        types: dict[str, str] = {}
+        for line in lines:
+            dm = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+                          r"((?:\([^)]*\))|(?:\w+\[[\d,]*\]))", line)
+            if dm:
+                types[dm.group(1)] = dm.group(2)
+            for pm in re.finditer(r"%?([\w.\-]+):\s*(\w+\[[\d,]*\])", line):
+                types.setdefault(pm.group(1), pm.group(2))
+        for line in lines:
+            s = line.strip()
+            # collectives ------------------------------------------------
+            for kind in _COLLECTIVES:
+                token = f" {kind}("
+                if token in f" {s}" or s.startswith(f"{kind}("):
+                    mm = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s*"
+                                  + kind.replace("-", r"\-") + r"\((.*)",
+                                  s)
+                    if not mm:
+                        continue
+                    res_t, rest = mm.groups()
+                    res_b = sum(_shape_bytes(t) for t in
+                                re.findall(r"\w+\[[\d,]*\]", res_t))
+                    op_b = 0
+                    depth = 1
+                    args = ""
+                    for ch in rest:
+                        if ch == "(":
+                            depth += 1
+                        elif ch == ")":
+                            depth -= 1
+                            if depth == 0:
+                                break
+                        args += ch
+                    op_b = sum(_shape_bytes(t) for t in
+                               re.findall(r"\w+\[[\d,]*\]", args))
+                    if op_b == 0:
+                        op_b = res_b
+                    gs = 0
+                    gm = re.search(r"replica_groups=\{\{([\d,]+)\}", s)
+                    if gm:
+                        gs = len(gm.group(1).split(","))
+                    else:
+                        gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", s)
+                        if gm:
+                            gs = int(gm.group(2))
+                    collectives.append(CollectiveOp(
+                        kind, name, res_b, op_b, mult, gs))
+                    break
+            # dots -------------------------------------------------------
+            dm = re.match(
+                r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\w+\[[\d,]*\])\S*\s*"
+                r"dot\(\s*%?([\w.\-]+)", s)
+            if dm:
+                res_t, lhs_name = dm.groups()
+                res_elems = 1
+                m3 = _SHAPE_RE.match(res_t)
+                if m3 and m3.group(2):
+                    for d in m3.group(2).split(","):
+                        if d:
+                            res_elems *= int(d)
+                lhs_t = types.get(lhs_name, "")
+                m4 = _SHAPE_RE.match(lhs_t)
+                lhs_dims = []
+                if m4 and m4.group(2):
+                    lhs_dims = [int(d) for d in m4.group(2).split(",") if d]
+                cm2 = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", s)
+                contract = 1
+                if cm2 and cm2.group(1) and lhs_dims:
+                    for ci in cm2.group(1).split(","):
+                        if ci:
+                            contract *= lhs_dims[int(ci)]
+                dot_flops += 2.0 * res_elems * contract * mult
+    coll_bytes = sum(c.wire_bytes for c in collectives)
+    return HloReport(collectives, dot_flops, coll_bytes, n_while,
+                     trip_counts)

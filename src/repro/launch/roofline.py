@@ -1,0 +1,186 @@
+"""Three-term roofline analysis from the dry-run artifacts (§Roofline).
+
+Terms per (arch x shape) cell on the single-pod mesh (v5e constants):
+
+  compute term    = HLO dot FLOPs per device / 197 TFLOP/s
+  memory term     = HBM bytes per device    / 819 GB/s
+  collective term = wire bytes per device   / 50 GB/s (per-link ICI)
+
+Sources and honesty notes (full methodology in EXPERIMENTS.md):
+  * dot FLOPs and collective bytes come from ``compiled.as_text()`` via
+    ``hlo_parse.analyze`` — *trip-count corrected* (XLA's cost_analysis
+    visits while bodies once; scan trip counts are recovered from the loop
+    condition constants and multiplied through, validated exact on no-scan
+    programs).
+  * HBM bytes use an explicit analytic traffic model (parameters, optimizer
+    state, saved activations under remat, KV cache) because fusion decisions
+    make byte-level traffic unrecoverable from HLO text; the model is
+    validated against cost_analysis on scan-free configs.
+  * MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); the ratio
+    MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch/attention overheads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # bf16 per chip (v5e)
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+CHIPS_SINGLE = 256
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float            # global, analytic
+    hlo_flops: float              # global = per-device x chips
+    params_bytes_per_device: float
+    notes: str = ""
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip FLOP roof achieved at the modelled bound:
+        (useful model FLOPs / chips / bound_time) / peak."""
+        if self.bound_time <= 0:
+            return 0.0
+        per_chip = self.model_flops / CHIPS_SINGLE
+        return (per_chip / self.bound_time) / PEAK_FLOPS
+
+
+# ---------------------------------------------------------------------------
+# analytic models
+# ---------------------------------------------------------------------------
+
+def model_flops_cell(arch: str, shape_name: str) -> float:
+    """Global MODEL_FLOPS for one step of the cell (6ND train, 2N_active
+    per generated token for decode, 2ND prefill)."""
+    from repro.configs import registry
+    from repro.models import lm as lm_lib
+    cfg = registry.get_config(arch)
+    shape = registry.get_shape(shape_name)
+    per_token_train = lm_lib.model_flops_per_token(cfg)   # 6N
+    n_active_2x = per_token_train / 3.0                   # 2N
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return per_token_train * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return n_active_2x * tokens
+    # decode: one token per sequence
+    return n_active_2x * shape.global_batch
+
+
+def memory_bytes_cell(arch: str, shape_name: str, rec: dict) -> float:
+    """Per-device HBM traffic model for one step (documented in
+    EXPERIMENTS.md §Roofline-methodology)."""
+    from repro.configs import registry
+    cfg = registry.get_config(arch)
+    shape = registry.get_shape(shape_name)
+    p_bytes = float(rec.get("params_bytes_per_device", 0.0))
+    p_elems = p_bytes / 4.0
+    d = cfg.d_model
+    L = cfg.n_layers
+    n_micro = max(1, getattr(cfg, "microbatches", 1))
+    # tokens per device = global tokens / data-parallel ways (batch shards
+    # over the 16-wide data axis when divisible, else replicates)
+    dp = 16 if shape.global_batch % 16 == 0 else 1
+    tokens_local = shape.global_batch * shape.seq_len / dp
+
+    if shape.kind == "train":
+        # weights f32: fwd+bwd reads per microbatch, grad write, AdamW rw
+        w_traffic = p_elems * 4.0 * (2 * n_micro + 5)
+        act_traffic = 8.0 * L * tokens_local * d * 2.0  # bf16, remat=full
+        return w_traffic + act_traffic
+    if shape.kind == "prefill":
+        w_traffic = p_bytes
+        act_traffic = 4.0 * L * tokens_local * d * 2.0
+        return w_traffic + act_traffic
+    # decode: all weights once + read the whole cache shard + write slot
+    mem = rec.get("memory", {})
+    cache_bytes = float(mem.get("alias_bytes", 0.0))  # donated cache shard
+    return p_bytes + cache_bytes + 2.0 * tokens_local / shape.seq_len * d * 2
+
+
+def load_cells(dryrun_dir: str = "experiments/dryrun",
+               mesh: str = "single") -> list[RooflineRow]:
+    rows = []
+    for path in sorted(pathlib.Path(dryrun_dir).glob(f"*__{mesh}.json")):
+        rec = json.loads(path.read_text())
+        if rec.get("status") != "ok":
+            continue
+        arch, shape_name = rec["arch"], rec["shape"]
+        dot_dev = float(rec["hlo"]["dot_flops_per_device"])
+        coll_dev = float(rec["hlo"]["collective_bytes_per_device"])
+        mem_dev = memory_bytes_cell(arch, shape_name, rec)
+        rows.append(RooflineRow(
+            arch=arch, shape=shape_name,
+            compute_s=dot_dev / PEAK_FLOPS,
+            memory_s=mem_dev / HBM_BW,
+            collective_s=coll_dev / LINK_BW,
+            model_flops=model_flops_cell(arch, shape_name),
+            hlo_flops=dot_dev * CHIPS_SINGLE,
+            params_bytes_per_device=rec.get("params_bytes_per_device", 0),
+        ))
+    return rows
+
+
+_MOVE_HINTS = {
+    "compute": ("increase arithmetic intensity per chip (larger per-device "
+                "batch, fuse quantisation into the matmul kernel)"),
+    "memory": ("cut HBM traffic: bf16/(wE,wF) weights, fewer remat "
+               "recomputes, keep KV in-place (donation)"),
+    "collective": ("rebind the dominant sharding axis: fewer TP "
+                   "activation all-reduces (SP/FSDP), bf16 reductions, "
+                   "overlap collectives with compute"),
+}
+
+
+def to_markdown(rows: list[RooflineRow]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | MODEL_FLOPS | useful ratio | roofline frac | "
+           "what moves the bound |\n|" + "---|" * 10)
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.compute_s:.4f} | "
+            f"{r.memory_s:.4f} | {r.collective_s:.4f} | **{r.dominant}** | "
+            f"{r.model_flops:.3e} | {r.useful_ratio:.2f} | "
+            f"{r.roofline_fraction:.3f} | {_MOVE_HINTS[r.dominant]} |")
+    return "\n".join(lines)
+
+
+def main() -> None:  # pragma: no cover
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    rows = load_cells(args.dir)
+    print(to_markdown(rows))
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

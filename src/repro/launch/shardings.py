@@ -1,0 +1,108 @@
+"""Sharding resolution: logical axes -> NamedShardings on a concrete mesh.
+
+This is where the paper's K_i binding rule meets real shapes: a logical
+binding is *pruned* when the tensor dimension doesn't divide the mesh-axis
+extent (e.g. batch=1 in long_500k can't shard over 16 data rows; 60 experts
+pad to 64 instead).  Pruning is per-tensor and deterministic, so dry-run,
+checkpointing and the elastic resharder all agree.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.binding import BindingRules
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.nn import module as module_lib
+
+
+def rules_for(cfg) -> BindingRules:
+    overrides = dict(getattr(cfg, "rules_overrides", ()) or ())
+    rules = BindingRules()
+    if overrides:
+        rules = rules.with_overrides(**overrides)
+    return rules
+
+
+def prune_spec(shape: tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes that don't evenly divide the tensor dimension."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        kept = []
+        extent = 1
+        for a in axes:
+            sz = mesh.shape[a]
+            if dim % (extent * sz) == 0:
+                kept.append(a)
+                extent *= sz
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    return P(*out)
+
+
+def sharding_for(shape: tuple[int, ...], axes: tuple, mesh: Mesh,
+                 rules: BindingRules) -> NamedSharding:
+    spec = rules.spec(axes, mesh)
+    return NamedSharding(mesh, prune_spec(shape, spec, mesh))
+
+
+def tree_shardings(abstract_tree: Any, axes_tree: Any, mesh: Mesh,
+                   rules: BindingRules) -> Any:
+    """Shardings for a pytree of ShapeDtypeStructs + matching axes tree."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+    flat_a, treedef = jax.tree_util.tree_flatten(abstract_tree)
+    flat_x = treedef.flatten_up_to(axes_tree)
+    out = [sharding_for(tuple(a.shape), x, mesh, rules)
+           for a, x in zip(flat_a, flat_x)]
+    del is_axes
+    return treedef.unflatten(out)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def bytes_per_device(abstract_tree: Any, shardings: Any) -> int:
+    """Largest per-device byte footprint of a sharded abstract tree."""
+    flat_a = jax.tree_util.tree_leaves(abstract_tree)
+    flat_s = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
+    total = 0
+    for a, s in zip(flat_a, flat_s):
+        shard_elems = int(np.prod(a.shape))
+        spec = s.spec
+        for dim, entry in zip(a.shape, tuple(spec)):
+            if entry is None:
+                continue
+            axes = (entry,) if isinstance(entry, str) else entry
+            for ax in axes:
+                shard_elems //= s.mesh.shape[ax]
+        total += shard_elems * jax.numpy.dtype(a.dtype).itemsize
+    return total
+
+
+def model_param_shardings(cfg: ModelConfig, mesh: Mesh):
+    """(abstract_params, shardings) for an LM config."""
+    from repro.models import encdec
+    from repro.nn import transformer
+    rules = rules_for(cfg)
+    if getattr(cfg, "is_encoder_decoder", False):
+        specs = encdec.model_specs(cfg)
+    else:
+        specs = transformer.model_specs(cfg)
+    abstract = module_lib.abstract_tree(specs)
+    axes = module_lib.axes_tree(specs)
+    return abstract, tree_shardings(abstract, axes, mesh, rules)

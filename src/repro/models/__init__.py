@@ -1,0 +1,5 @@
+"""Assembled models: causal LM, BraggNN, encoder-decoder."""
+
+from repro.models import braggnn, encdec, lm
+
+__all__ = ["braggnn", "encdec", "lm"]

@@ -1,0 +1,207 @@
+"""Encoder-decoder backbone (whisper-tiny).
+
+Per the brief, the conv/audio frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, n_frames, d_model).  The encoder is a
+bidirectional transformer over frames with learned positions; the decoder is
+a causal transformer with cross-attention into the encoder output.  Decoder
+positions are sized from the assigned shape (synthetically extended past
+whisper's trained 448 — shape exercise only; see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import attention, layers, module, transformer
+
+ACCUM = jnp.float32
+
+
+def _enc_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": layers.layernorm_specs(cfg.d_model),
+        "attn": attention.attn_specs(cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.resolved_head_dim),
+        "ln2": layers.layernorm_specs(cfg.d_model),
+        "mlp": layers.mlp_specs(cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def _dec_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": layers.layernorm_specs(cfg.d_model),
+        "self_attn": attention.attn_specs(cfg.d_model, cfg.n_heads,
+                                          cfg.n_kv_heads,
+                                          cfg.resolved_head_dim),
+        "ln_cross": layers.layernorm_specs(cfg.d_model),
+        "cross_attn": attention.attn_specs(cfg.d_model, cfg.n_heads,
+                                           cfg.n_kv_heads,
+                                           cfg.resolved_head_dim),
+        "ln2": layers.layernorm_specs(cfg.d_model),
+        "mlp": layers.mlp_specs(cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": layers.embedding_specs(cfg.vocab_size, cfg.d_model),
+        "enc_pos": {"table": module.ParamSpec(
+            (cfg.encoder_len, cfg.d_model), (None, "embed"), scale=0.02)},
+        "dec_pos": {"table": module.ParamSpec(
+            (cfg.max_position, cfg.d_model), (None, "embed"), scale=0.02)},
+        "encoder": module.stack(_enc_layer_specs(cfg), cfg.n_encoder_layers),
+        "decoder": module.stack(_dec_layer_specs(cfg), cfg.n_layers),
+        "enc_norm": layers.layernorm_specs(cfg.d_model),
+        "dec_norm": layers.layernorm_specs(cfg.d_model),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array) -> jax.Array:
+    """frames: (B, T_enc, d) stubbed frontend embeddings."""
+    dt = jnp.dtype(cfg.activation_dtype)
+    x = frames.astype(dt)
+    t = x.shape[1]
+    pos = params["enc_pos"]["table"].astype(dt)
+    x = x + pos[jnp.minimum(jnp.arange(t), pos.shape[0] - 1)]
+    b = x.shape[0]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    def body(x, p):
+        h = layers.layernorm(p["ln1"], x, eps=cfg.norm_eps)
+        y = attention.self_attention(
+            p["attn"], h, positions, n_kv_heads=cfg.n_kv_heads, causal=False,
+            rope_theta=cfg.rope_theta, quant=cfg.quant_format,
+            block_size=cfg.attn_block_size)
+        x = x + y
+        h = layers.layernorm(p["ln2"], x, eps=cfg.norm_eps)
+        x = x + layers.mlp(p["mlp"], h, act="gelu", quant=cfg.quant_format)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return layers.layernorm(params["enc_norm"], x, eps=cfg.norm_eps)
+
+
+def _dec_layer(cfg: ModelConfig, p: dict, x, positions, enc,
+               cache: Optional[dict] = None,
+               pos_scalar: Optional[jax.Array] = None):
+    h = layers.layernorm(p["ln1"], x, eps=cfg.norm_eps)
+    if cache is None:
+        y = attention.self_attention(
+            p["self_attn"], h, positions, n_kv_heads=cfg.n_kv_heads,
+            causal=True, rope_theta=cfg.rope_theta, quant=cfg.quant_format,
+            block_size=cfg.attn_block_size)
+        new_cache = None
+    else:
+        y, new_cache = attention.decode_attention(
+            p["self_attn"], h, cache, pos_scalar,
+            n_kv_heads=cfg.n_kv_heads, rope_theta=cfg.rope_theta,
+            quant=cfg.quant_format)
+    x = x + y
+    h = layers.layernorm(p["ln_cross"], x, eps=cfg.norm_eps)
+    x = x + attention.cross_attention(p["cross_attn"], h, enc,
+                                      n_kv_heads=cfg.n_kv_heads,
+                                      quant=cfg.quant_format)
+    h = layers.layernorm(p["ln2"], x, eps=cfg.norm_eps)
+    x = x + layers.mlp(p["mlp"], h, act="gelu", quant=cfg.quant_format)
+    return x, new_cache
+
+
+def decode_forward(cfg: ModelConfig, params, tokens: jax.Array,
+                   enc: jax.Array, last_logit_only: bool = False
+                   ) -> jax.Array:
+    """Teacher-forced decoder forward (training).  Returns logits."""
+    dt = jnp.dtype(cfg.activation_dtype)
+    x = layers.embed(params["embed"], tokens, dtype=dt)
+    b, s = tokens.shape
+    pos_tab = params["dec_pos"]["table"].astype(dt)
+    x = x + pos_tab[jnp.minimum(jnp.arange(s), pos_tab.shape[0] - 1)]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, p):
+        x, _ = _dec_layer(cfg, p, x, positions, enc)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = layers.layernorm(params["dec_norm"], x, eps=cfg.norm_eps)
+    if last_logit_only:
+        x = x[:, -1:, :]
+    return layers.unembed(params["embed"], x, quant=cfg.quant_format)
+
+
+def train_loss(cfg: ModelConfig, params, batch: dict):
+    """batch: {frames (B,T,d), tokens (B,S), targets (B,S)}."""
+    enc = encode(cfg, params, batch["frames"])
+    logits = decode_forward(cfg, params, batch["tokens"], enc)
+    logp = jax.nn.log_softmax(logits.astype(ACCUM), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["targets"][..., None],
+                               axis=-1)[..., 0]
+    mask = (batch["targets"] >= 0).astype(ACCUM)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dh = cfg.resolved_head_dim
+    per = attention.kv_cache_specs(batch, max_len, cfg.n_kv_heads, dh)
+    stacked = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + tuple(s.shape),
+                                       s.dtype), per)
+    return {"self": stacked,
+            "enc": jax.ShapeDtypeStruct(
+                (batch, cfg.encoder_len, cfg.d_model),
+                jnp.dtype(cfg.activation_dtype))}
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    """Logical axes matching ``cache_specs``."""
+    kv = ("layers", "batch", None, "kv_heads", "head_dim")
+    return {"self": {"k": kv, "v": kv},
+            "enc": ("batch", None, None)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc: Optional[jax.Array] = None) -> dict:
+    dh = cfg.resolved_head_dim
+    per = [attention.init_kv_cache(batch, max_len, cfg.n_kv_heads, dh)
+           for _ in range(cfg.n_layers)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+    if enc is None:
+        enc = jnp.zeros((batch, cfg.encoder_len, cfg.d_model),
+                        jnp.dtype(cfg.activation_dtype))
+    return {"self": stacked, "enc": enc}
+
+
+def serve_step(cfg: ModelConfig, params, tokens: jax.Array, cache: dict,
+               pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One decode step against a fixed encoder output held in the cache."""
+    dt = jnp.dtype(cfg.activation_dtype)
+    x = layers.embed(params["embed"], tokens, dtype=dt)
+    pos_tab = params["dec_pos"]["table"].astype(dt)
+    x = x + pos_tab[jnp.minimum(pos[:, None], pos_tab.shape[0] - 1)]
+    enc = cache["enc"]
+
+    # cache as loop carry with in-place dynamic updates (no ys double-buffer)
+    def body(carry, p):
+        x, cache_stack, idx = carry
+        c = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0,
+                                                   keepdims=False),
+            cache_stack)
+        x, nc = _dec_layer(cfg, p, x, pos[:, None], enc, cache=c,
+                           pos_scalar=pos)
+        cache_stack = jax.tree_util.tree_map(
+            lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                a, u.astype(a.dtype), idx, 0), cache_stack, nc)
+        return (x, cache_stack, idx + 1), None
+
+    (x, new_self, _), _ = jax.lax.scan(
+        body, (x, cache["self"], jnp.zeros((), jnp.int32)),
+        params["decoder"])
+    x = layers.layernorm(params["dec_norm"], x, eps=cfg.norm_eps)
+    logits = layers.unembed(params["embed"], x, quant=cfg.quant_format)
+    next_tok = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+    return next_tok, {"self": new_self, "enc": enc}

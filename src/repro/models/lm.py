@@ -1,0 +1,88 @@
+"""Causal language model: loss, train forward, serve step.
+
+``train_loss`` is the objective lowered by the train_4k cells;
+``serve_step`` (one token, cached) is what the decode cells lower.
+``prefill`` is the prefill_32k workload: full-sequence forward that also
+returns the logits of the last position (the serving prefill contract).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import transformer
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def train_loss(cfg: ModelConfig, params, batch: dict) -> tuple[jax.Array, dict]:
+    """Next-token cross-entropy.  batch: {tokens, targets[, patches]}.
+
+    Returns (loss, metrics).
+    """
+    logits, aux = transformer.forward(
+        cfg, params, batch["tokens"], patches=batch.get("patches"))
+    targets = batch["targets"]
+    if logits.shape[1] != targets.shape[1]:      # VLM: drop patch positions
+        logits = logits[:, -targets.shape[1]:, :]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + AUX_WEIGHT * aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "tokens": jnp.sum(mask)}
+
+
+def prefill(cfg: ModelConfig, params, tokens: jax.Array,
+            patches: Optional[jax.Array] = None) -> jax.Array:
+    """Prefill workload: logits at the final position, (B, vocab).
+
+    Only the last position is unembedded — materialising (B, S, vocab)
+    logits at 32k prefill would cost GBs of HBM and S x the unembed FLOPs
+    for values that are thrown away.
+    """
+    logits, _ = transformer.forward(cfg, params, tokens, patches=patches,
+                                    last_logit_only=True)
+    return logits[:, -1, :]
+
+
+def serve_step(cfg: ModelConfig, params, tokens: jax.Array, cache: dict,
+               pos: jax.Array) -> tuple[jax.Array, dict]:
+    """One decode step: greedy next token + updated cache.
+
+    tokens: (B, 1) current token; pos: (B,) its position index.
+    Returns (next_token (B,), new_cache).
+    """
+    logits, new_cache = transformer.decode_step(cfg, params, tokens, cache,
+                                                pos)
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tok, new_cache
+
+
+def model_flops_per_token(cfg: ModelConfig) -> float:
+    """MODEL_FLOPS = 6·N (dense) or 6·N_active (MoE) per token (§Roofline)."""
+    from repro.nn import module as module_lib
+    specs = transformer.model_specs(cfg)
+    if cfg.n_experts == 0:
+        n = module_lib.param_count(specs)
+        # embeddings participate once (unembed matmul), not 6x; keep the
+        # standard 6N convention which already approximates this.
+        return 6.0 * n
+    # MoE: count non-expert params fully + only top-k of routed experts
+    import numpy as np
+    total = 0
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, module_lib.ParamSpec))[0]
+    for path, spec in leaves_with_path:
+        keys = [getattr(k, "key", str(k)) for k in path]
+        size = int(np.prod(spec.shape))
+        if "experts" in keys:
+            e = cfg.n_experts_padded or cfg.n_experts
+            size = size // e * cfg.experts_per_token
+        total += size
+    return 6.0 * total

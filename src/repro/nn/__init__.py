@@ -1,0 +1,6 @@
+"""Model substrate: layers, attention, MoE, recurrent blocks, assembly."""
+
+from repro.nn import attention, layers, module, moe, rglru, rope, transformer, xlstm
+
+__all__ = ["attention", "layers", "module", "moe", "rglru", "rope",
+           "transformer", "xlstm"]

@@ -1,0 +1,144 @@
+"""Basic layers: norms, dense projections, embeddings, MLPs.
+
+Convention: params are plain dicts produced from the matching ``*_specs``
+function; apply functions are pure.  Matmuls run in the activation dtype
+(bf16 by default) with fp32 accumulation (``preferred_element_type``), the
+TPU-native discipline.  When a ``quant`` format is supplied, weights pass
+through the paper's (wE,wF) quantiser first — reduced precision as a
+first-class feature (paper §4.2) across every architecture.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import FORMATS, FloatFormat, quantize
+from repro.nn.module import ParamSpec
+
+ACCUM = jnp.float32
+
+
+def maybe_quantize(w: jax.Array, quant: Optional[str]) -> jax.Array:
+    if quant is None:
+        return w
+    fmt: FloatFormat = FORMATS[quant]
+    return quantize(w, fmt)
+
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+        "tanh": jnp.tanh,
+    }[name]
+
+
+# -- norms -------------------------------------------------------------------
+
+def rmsnorm_specs(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p: dict, x: jax.Array, *, eps: float = 1e-6,
+            zero_centered: bool = False) -> jax.Array:
+    xf = x.astype(ACCUM)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(ACCUM)
+    if zero_centered:           # gemma-style (1 + scale)
+        scale = 1.0 + scale
+    return (y * scale).astype(x.dtype)
+
+
+def layernorm_specs(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones"),
+            "bias": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def layernorm(p: dict, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(ACCUM)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(ACCUM) + p["bias"].astype(ACCUM)
+            ).astype(x.dtype)
+
+
+# -- dense -------------------------------------------------------------------
+
+def dense_specs(d_in: int, d_out: int, *, axes: tuple = ("embed", "mlp"),
+                bias: bool = False, bias_axis: Optional[str] = None) -> dict:
+    out = {"kernel": ParamSpec((d_in, d_out), axes)}
+    if bias:
+        out["bias"] = ParamSpec((d_out,), (bias_axis,), init="zeros")
+    return out
+
+
+def dense(p: dict, x: jax.Array, *, quant: Optional[str] = None) -> jax.Array:
+    w = maybe_quantize(p["kernel"], quant).astype(x.dtype)
+    y = jnp.einsum("...k,kn->...n", x, w,
+                   preferred_element_type=ACCUM)
+    if "bias" in p:
+        y = y + p["bias"].astype(ACCUM)
+    return y.astype(x.dtype)
+
+
+# -- embedding ----------------------------------------------------------------
+
+def embedding_specs(vocab: int, d: int) -> dict:
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), scale=1.0)}
+
+
+def embed(p: dict, ids: jax.Array, *, dtype=jnp.bfloat16) -> jax.Array:
+    return p["table"].astype(dtype)[ids]
+
+
+def unembed(p: dict, x: jax.Array, *, quant: Optional[str] = None
+            ) -> jax.Array:
+    """Project to vocabulary logits with the (possibly tied) table."""
+    w = maybe_quantize(p["table"], quant).astype(x.dtype)
+    return jnp.einsum("...d,vd->...v", x, w, preferred_element_type=ACCUM)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+def mlp_specs(d: int, d_ff: int, *, gated: bool = True) -> dict:
+    out = {
+        "wi": ParamSpec((d, d_ff), ("embed", "mlp")),
+        "wo": ParamSpec((d_ff, d), ("mlp", "embed")),
+    }
+    if gated:
+        out["wg"] = ParamSpec((d, d_ff), ("embed", "mlp"))
+    return out
+
+
+def mlp(p: dict, x: jax.Array, *, act: str = "silu",
+        quant: Optional[str] = None,
+        reduce_dtype=None) -> jax.Array:
+    """``reduce_dtype``: dtype of the row-parallel output projection whose
+    partial sums cross devices (bf16 halves the TP all-reduce bytes)."""
+    f = activation(act)
+    wi = maybe_quantize(p["wi"], quant).astype(x.dtype)
+    wo = maybe_quantize(p["wo"], quant).astype(x.dtype)
+    h = jnp.einsum("...d,df->...f", x, wi, preferred_element_type=ACCUM)
+    if "wg" in p:
+        wg = maybe_quantize(p["wg"], quant).astype(x.dtype)
+        g = jnp.einsum("...d,df->...f", x, wg, preferred_element_type=ACCUM)
+        h = f(g) * h
+    else:
+        h = f(h)
+    h = h.astype(x.dtype)
+    out_dt = reduce_dtype or ACCUM
+    return jnp.einsum("...f,fd->...d", h, wo,
+                      preferred_element_type=out_dt).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,103 @@
+"""Parameter/module system: param trees with logical sharding axes.
+
+Every parameter is declared by a ``ParamSpec`` carrying its shape and a
+tuple of *logical axis names*.  Logical names resolve to mesh axes through
+``repro.core.binding.BindingRules`` — the paper's K_i resource-binding rule
+operating at pod scale.  Declaring axes at parameter-creation time (rather
+than annotating call sites) keeps a single source of truth for the dry-run's
+in_shardings, the checkpointing layouts and the elastic resharder.
+
+Specs compose as plain nested dicts; ``stack`` prepends a ``layers`` axis so
+homogeneous blocks can be scanned with ``jax.lax.scan`` (small HLO, fast
+compile — essential for lowering 40 architecture x shape cells on one CPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: Axes
+    init: str = "normal"          # normal | zeros | ones
+    scale: Optional[float] = None  # stddev; None -> 1/sqrt(fan_in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def fan_in(self) -> int:
+        if len(self.shape) <= 1:
+            return max(self.shape[0] if self.shape else 1, 1)
+        return int(np.prod(self.shape[:-1]))
+
+
+SpecTree = Any  # nested dict of ParamSpec
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def map_specs(fn: Callable[[ParamSpec], Any], specs: SpecTree) -> Any:
+    return jax.tree_util.tree_map(fn, specs, is_leaf=_is_spec)
+
+
+def init_tree(specs: SpecTree, key: jax.Array) -> Any:
+    """Materialise parameters (fold keys deterministically over the tree)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    out = []
+    for i, spec in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, spec.dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, spec.dtype)
+        else:
+            std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(
+                spec.fan_in())
+            arr = (jax.random.normal(k, spec.shape, jnp.float32) * std
+                   ).astype(spec.dtype)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_tree(specs: SpecTree) -> Any:
+    """ShapeDtypeStruct stand-ins — no allocation (dry-run path)."""
+    return map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def axes_tree(specs: SpecTree) -> Any:
+    """The logical-axes tree matching the param tree's structure."""
+    return map_specs(lambda s: s.axes, specs)
+
+
+def stack(specs: SpecTree, n: int) -> SpecTree:
+    """Prepend a ``layers`` dimension to every spec (scan-over-layers)."""
+    return map_specs(
+        lambda s: dataclasses.replace(
+            s, shape=(n,) + s.shape, axes=("layers",) + s.axes), specs)
+
+
+def param_count(specs: SpecTree) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def param_bytes(specs: SpecTree) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+                   for s in leaves))

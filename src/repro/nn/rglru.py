@@ -1,0 +1,165 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t)                      (recurrence gate)
+    i_t = sigmoid(W_x x_t)                      (input gate)
+    log a_t = -c * softplus(Lambda) * r_t       (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+A *diagonal linear* recurrence — lowered to ``jax.lax.associative_scan``
+(parallel over sequence, the paper's reduction-tree insight applied to
+time), so prefill is O(S log S) depth and decode is a single fused update
+with O(1) state.  Gate matrices are block-diagonal over heads, as in
+RecurrentGemma.  Preceded by a short causal depthwise conv (width 4).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import maybe_quantize
+from repro.nn.module import ParamSpec
+
+ACCUM = jnp.float32
+C_RGLRU = 8.0
+
+
+def rglru_block_specs(d: int, lru_width: int, n_heads: int,
+                      conv_width: int = 4) -> dict:
+    w = lru_width // n_heads
+    return {
+        "in_x": {"kernel": ParamSpec((d, lru_width), ("embed", "mlp"))},
+        "in_gate": {"kernel": ParamSpec((d, lru_width), ("embed", "mlp"))},
+        "conv": {"kernel": ParamSpec((conv_width, lru_width),
+                                     (None, "mlp")),
+                 "bias": ParamSpec((lru_width,), ("mlp",), init="zeros")},
+        "gate_a": {"kernel": ParamSpec((n_heads, w, w),
+                                       ("heads", None, None), scale=0.02),
+                   "bias": ParamSpec((lru_width,), ("mlp",), init="zeros")},
+        "gate_x": {"kernel": ParamSpec((n_heads, w, w),
+                                       ("heads", None, None), scale=0.02),
+                   "bias": ParamSpec((lru_width,), ("mlp",), init="zeros")},
+        "lamb": ParamSpec((lru_width,), ("mlp",), init="ones"),
+        "out": {"kernel": ParamSpec((lru_width, d), ("mlp", "embed"))},
+    }
+
+
+def _blockdiag(p: dict, x: jax.Array, n_heads: int) -> jax.Array:
+    """x: (..., W) through block-diagonal (H, w, w) + bias."""
+    *lead, W = x.shape
+    w = W // n_heads
+    xh = x.reshape(*lead, n_heads, w)
+    y = jnp.einsum("...hw,hwv->...hv", xh.astype(ACCUM),
+                   p["kernel"].astype(ACCUM))
+    return y.reshape(*lead, W) + p["bias"].astype(ACCUM)
+
+
+def _causal_conv(p: dict, x: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv via shifted adds (width is small).
+
+    x: (B, S, W).  state: (B, cw-1, W) trailing context for decode.
+    Returns (y, new_state).
+    """
+    cw = p["kernel"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    ctx = jnp.concatenate([state, x], axis=1)        # (B, S+cw-1, W)
+    y = jnp.zeros_like(x, dtype=ACCUM)
+    for j in range(cw):
+        tap = ctx[:, j:j + x.shape[1], :].astype(ACCUM)
+        y = y + tap * p["kernel"][cw - 1 - j].astype(ACCUM)
+    y = y + p["bias"].astype(ACCUM)
+    new_state = ctx[:, -(cw - 1):, :] if cw > 1 else state
+    return y.astype(x.dtype), new_state
+
+
+def _gates(p: dict, x: jax.Array, n_heads: int
+           ) -> tuple[jax.Array, jax.Array]:
+    """Returns (log_a, gated_input) both (B, S, W) in fp32."""
+    r = jax.nn.sigmoid(_blockdiag(p["gate_a"], x, n_heads))
+    i = jax.nn.sigmoid(_blockdiag(p["gate_x"], x, n_heads))
+    log_a = -C_RGLRU * jax.nn.softplus(p["lamb"].astype(ACCUM)) * r
+    a2 = jnp.exp(2.0 * log_a)
+    gx = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * x.astype(ACCUM))
+    return log_a, gx
+
+
+def rglru_scan(p: dict, x: jax.Array, *, n_heads: int,
+               h0: Optional[jax.Array] = None
+               ) -> tuple[jax.Array, jax.Array]:
+    """Parallel RG-LRU over a sequence.  x: (B, S, W) -> (y, h_last)."""
+    log_a, gx = _gates(p, x, n_heads)
+    a = jnp.exp(log_a)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_seq, b_seq = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    h = b_seq
+    if h0 is not None:
+        h = h + a_seq * h0[:, None, :].astype(ACCUM)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(p: dict, x: jax.Array, h: jax.Array, *, n_heads: int
+               ) -> tuple[jax.Array, jax.Array]:
+    """Single decode step.  x: (B, 1, W), h: (B, W) fp32 state."""
+    log_a, gx = _gates(p, x, n_heads)
+    a = jnp.exp(log_a[:, 0, :])
+    h_new = a * h + gx[:, 0, :]
+    return h_new.astype(x.dtype)[:, None, :], h_new
+
+
+def rglru_block(p: dict, x: jax.Array, *, n_heads: int,
+                cache: Optional[dict] = None,
+                quant: Optional[str] = None
+                ) -> tuple[jax.Array, Optional[dict]]:
+    """The Griffin recurrent temporal-mixing block (drop-in for attention).
+
+    y = W_out( gelu(W_gate x) * RGLRU(conv4(W_x x)) )
+
+    cache (decode): {"h": (B, W) fp32, "conv": (B, cw-1, W)}.
+    """
+    w_x = maybe_quantize(p["in_x"]["kernel"], quant).astype(x.dtype)
+    w_g = maybe_quantize(p["in_gate"]["kernel"], quant).astype(x.dtype)
+    xb = jnp.einsum("bsd,dw->bsw", x, w_x, preferred_element_type=ACCUM
+                    ).astype(x.dtype)
+    gb = jnp.einsum("bsd,dw->bsw", x, w_g, preferred_element_type=ACCUM)
+    conv_state = cache.get("conv") if cache else None
+    xc, new_conv = _causal_conv(p["conv"], xb, conv_state)
+    if cache is not None:
+        y_rec, h = rglru_step(p, xc, cache["h"], n_heads=n_heads)
+        new_cache = {"h": h, "conv": new_conv}
+    else:
+        y_rec, h_last = rglru_scan(p, xc, n_heads=n_heads)
+        new_cache = None
+    y = jax.nn.gelu(gb, approximate=True).astype(x.dtype) * y_rec
+    w_o = maybe_quantize(p["out"]["kernel"], quant).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, w_o, preferred_element_type=ACCUM
+                     ).astype(x.dtype)
+    return out, new_cache
+
+
+def rglru_cache_specs(batch: int, lru_width: int, conv_width: int = 4
+                      ) -> dict:
+    return {
+        "h": jax.ShapeDtypeStruct((batch, lru_width), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, conv_width - 1, lru_width),
+                                     jnp.bfloat16),
+    }
+
+
+def init_rglru_cache(batch: int, lru_width: int, conv_width: int = 4,
+                     dtype=jnp.bfloat16) -> dict:
+    return {
+        "h": jnp.zeros((batch, lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, lru_width), dtype),
+    }

@@ -1,0 +1,87 @@
+"""Rotary position embeddings: standard, partial (StableLM) and M-RoPE
+(Qwen2-VL multimodal 3-section rotary, arXiv:2409.12191).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for pairs (head_dim must be even)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0,
+         fraction: float = 1.0) -> jax.Array:
+    """Apply RoPE.
+
+    x:         (..., S, H, D)
+    positions: (..., S)  integer positions
+    fraction:  rotate only the first ``fraction`` of D (StableLM partial rope)
+    """
+    d = x.shape[-1]
+    rot_d = int(d * fraction)
+    rot_d -= rot_d % 2
+    if rot_d == 0:
+        return x
+    x_rot, x_pass = x[..., :rot_d], x[..., rot_d:]
+    inv = _freqs(rot_d, theta)                             # (rot_d/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., S, rot_d/2)
+    ang = ang[..., None, :]                                # (..., S, 1, rot_d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+def mrope(x: jax.Array, positions_3d: jax.Array, *,
+          sections: Sequence[int], theta: float = 10000.0) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): frequency bands split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x:            (B, S, H, D)
+    positions_3d: (B, 3, S) — temporal, height, width position ids
+    sections:     per-section sizes in *pair* units; sum == D/2
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    inv = _freqs(d, theta)                                  # (half,)
+    # build the interleaved position stream per frequency band
+    band_pos = []
+    off = 0
+    for s_idx, sec in enumerate(sections):
+        p = positions_3d[:, s_idx, :]                       # (B, S)
+        band_pos.append(jnp.broadcast_to(p[..., None], p.shape + (sec,)))
+        off += sec
+    pos = jnp.concatenate(band_pos, axis=-1).astype(jnp.float32)  # (B,S,half)
+    ang = pos * inv                                          # (B, S, half)
+    ang = ang[..., None, :]                                  # (B, S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def text_positions_3d(positions: jax.Array) -> jax.Array:
+    """M-RoPE position stream for text-only input: t == h == w."""
+    return jnp.stack([positions, positions, positions], axis=1)
+
+
+def apply_rope(q: jax.Array, k: jax.Array, positions: jax.Array, *,
+               theta: float, fraction: float = 1.0,
+               mrope_sections: Optional[Sequence[int]] = None
+               ) -> tuple[jax.Array, jax.Array]:
+    """Rotate q and k with the configured scheme."""
+    if mrope_sections:
+        if positions.ndim == 2:  # (B, S) text-only fallback
+            positions = text_positions_3d(positions)
+        return (mrope(q, positions, sections=mrope_sections, theta=theta),
+                mrope(k, positions, sections=mrope_sections, theta=theta))
+    return (rope(q, positions, theta=theta, fraction=fraction),
+            rope(k, positions, theta=theta, fraction=fraction))

@@ -1,0 +1,367 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunkwise-parallel) and sLSTM
+(scalar-memory, sequential) — arXiv:2405.04517.
+
+mLSTM is a linear-attention-style cell with exponential gating and a
+max-stabiliser.  Training/prefill uses the *chunkwise* form: quadratic
+within a chunk, recurrent (C, n, m) state across chunks via ``lax.scan`` —
+memory O(S x chunk) and exact w.r.t. the recurrent semantics.  Decode is a
+single fused state update.  This is the TPU-native rendering of the paper's
+static-scheduling insight for recurrences: the chunk grid is the schedule.
+
+sLSTM has genuine state-dependent gating (recurrent R matrices, shared
+max-stabiliser) and cannot be parallelised over time; it lowers to
+``lax.scan`` over steps (compile time is length-independent).
+
+Block structure follows the official xLSTM backbone: mLSTM block with
+projection factor 2 and causal conv4; sLSTM block with a gated FFN of
+factor 4/3.  The assigned xlstm-1.3b config has d_ff = 0: all FFN compute
+lives inside these blocks.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import maybe_quantize, rmsnorm
+from repro.nn.module import ParamSpec
+
+ACCUM = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_block_specs(d: int, n_heads: int, *, proj_factor: int = 2,
+                      conv_width: int = 4) -> dict:
+    d_in = proj_factor * d
+    dh = d_in // n_heads
+    return {
+        "up_main": {"kernel": ParamSpec((d, d_in), ("embed", "mlp"))},
+        "up_gate": {"kernel": ParamSpec((d, d_in), ("embed", "mlp"))},
+        "conv": {"kernel": ParamSpec((conv_width, d_in), (None, "mlp")),
+                 "bias": ParamSpec((d_in,), ("mlp",), init="zeros")},
+        "q": {"kernel": ParamSpec((d_in, n_heads, dh),
+                                  ("mlp", "heads", "head_dim"))},
+        "k": {"kernel": ParamSpec((d_in, n_heads, dh),
+                                  ("mlp", "heads", "head_dim"))},
+        "v": {"kernel": ParamSpec((d_in, n_heads, dh),
+                                  ("mlp", "heads", "head_dim"))},
+        "igate": {"kernel": ParamSpec((d_in, n_heads), ("mlp", "heads"),
+                                      scale=0.02),
+                  "bias": ParamSpec((n_heads,), ("heads",), init="zeros")},
+        "fgate": {"kernel": ParamSpec((d_in, n_heads), ("mlp", "heads"),
+                                      scale=0.02),
+                  "bias": ParamSpec((n_heads,), ("heads",), init="ones")},
+        "head_norm": {"scale": ParamSpec((n_heads, dh),
+                                         ("heads", "head_dim"),
+                                         init="ones")},
+        "down": {"kernel": ParamSpec((d_in, d), ("mlp", "embed"))},
+    }
+
+
+def _conv4(p: dict, x: jax.Array, state: Optional[jax.Array]
+           ) -> tuple[jax.Array, jax.Array]:
+    cw = p["kernel"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    ctx = jnp.concatenate([state, x], axis=1)
+    y = jnp.zeros_like(x, dtype=ACCUM)
+    for j in range(cw):
+        y = y + ctx[:, j:j + x.shape[1], :].astype(ACCUM) * \
+            p["kernel"][cw - 1 - j].astype(ACCUM)
+    y = y + p["bias"].astype(ACCUM)
+    return y.astype(x.dtype), ctx[:, -(cw - 1):, :]
+
+
+def _mlstm_chunk(q, k, v, log_f, log_i, state):
+    """One chunk of the stabilised chunkwise mLSTM.
+
+    q,k,v: (B, L, H, D); log_f, log_i: (B, L, H)
+    state: (C (B,H,D,D), n (B,H,D), m (B,H)) — all fp32.
+    Returns (h (B,L,H,D), new_state).
+    """
+    C_prev, n_prev, m_prev = state
+    b, l, h, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, ACCUM))
+    F = jnp.cumsum(log_f, axis=1)                       # inclusive (B,L,H)
+    # intra-chunk log decay matrix:  D[t,s] = F_t - F_s + log_i_s  (s <= t)
+    Dmat = (F[:, :, None, :] - F[:, None, :, :]
+            + log_i[:, None, :, :])                     # (B,T,S,H)
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    Dmat = jnp.where(causal[None, :, :, None], Dmat, -jnp.inf)
+    # stabiliser per (b, t, h): max over intra decays and inter decay
+    b_inter = F + m_prev[:, None, :]                    # (B,L,H)
+    m_intra = jnp.max(Dmat, axis=2)                     # (B,T,H)
+    m_t = jnp.maximum(m_intra, b_inter)
+    m_t = jnp.maximum(m_t, -1e30)
+    w_intra = jnp.exp(Dmat - m_t[:, :, None, :])        # (B,T,S,H)
+    w_inter = jnp.exp(b_inter - m_t)                    # (B,T,H)
+
+    scores = jnp.einsum("bthd,bshd->btsh", q.astype(ACCUM),
+                        k.astype(ACCUM)) * scale * w_intra
+    num = jnp.einsum("btsh,bshd->bthd", scores, v.astype(ACCUM))
+    num = num + w_inter[..., None] * jnp.einsum(
+        "bthd,bhde->bthe", q.astype(ACCUM) * scale, C_prev)
+    den_vec = jnp.einsum("btsh,bshd->bthd", w_intra, k.astype(ACCUM))
+    den = jnp.einsum("bthd,bthd->bth", q.astype(ACCUM) * scale, den_vec)
+    den = den + w_inter * jnp.einsum("bthd,bhd->bth",
+                                     q.astype(ACCUM) * scale, n_prev)
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+    h_out = num / den[..., None]
+
+    # end-of-chunk state update
+    F_L = F[:, -1, :]                                   # (B,H)
+    m_new = jnp.maximum(F_L + m_prev, jnp.max(
+        F_L[:, None, :] - F + log_i, axis=1))
+    decay_state = jnp.exp(F_L + m_prev - m_new)         # (B,H)
+    w_kv = jnp.exp(F_L[:, None, :] - F + log_i - m_new[:, None, :])
+    C_new = (decay_state[..., None, None] * C_prev
+             + jnp.einsum("bsh,bshd,bshe->bhde", w_kv, k.astype(ACCUM),
+                          v.astype(ACCUM)))
+    n_new = (decay_state[..., None] * n_prev
+             + jnp.einsum("bsh,bshd->bhd", w_kv, k.astype(ACCUM)))
+    return h_out, (C_new, n_new, m_new)
+
+
+def mlstm_cell(q, k, v, log_f, log_i, *, chunk: int = 256,
+               state: Optional[tuple] = None):
+    """Chunkwise mLSTM over a full sequence.  Shapes as in _mlstm_chunk."""
+    b, s, h, d = q.shape
+    if state is None:
+        state = (jnp.zeros((b, h, d, d), ACCUM),
+                 jnp.zeros((b, h, d), ACCUM),
+                 jnp.full((b, h), -1e30, ACCUM))
+    if s <= chunk:
+        return _mlstm_chunk(q, k, v, log_f, log_i, state)
+    if s % chunk:
+        # pad to a chunk multiple; padded steps carry zero input gates
+        # (log_i = -inf) so they contribute nothing, and their outputs are
+        # sliced off below (causality protects the real positions).
+        pad = chunk - s % chunk
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, zpad) for a in (q, k, v))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        h_out, st = mlstm_cell(q, k, v, log_f, log_i, chunk=chunk,
+                               state=state)
+        return h_out[:, :s], st
+    nc = s // chunk
+
+    def resh(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(map(resh, (q, k, v, log_f, log_i)))
+
+    def step(carry, xt):
+        qt, kt, vt, ft, it = xt
+        h_out, new = _mlstm_chunk(qt, kt, vt, ft, it, carry)
+        return new, h_out
+
+    state, hs = jax.lax.scan(step, state, xs)
+    h_out = hs.swapaxes(0, 1).reshape(b, s, h, d)
+    return h_out, state
+
+
+def mlstm_block(p: dict, x: jax.Array, *, n_heads: int, chunk: int = 256,
+                cache: Optional[dict] = None, quant: Optional[str] = None
+                ) -> tuple[jax.Array, Optional[dict]]:
+    """Full mLSTM block.  cache (decode): {C, n, m, conv}."""
+    dt = x.dtype
+    w_main = maybe_quantize(p["up_main"]["kernel"], quant).astype(dt)
+    w_gate = maybe_quantize(p["up_gate"]["kernel"], quant).astype(dt)
+    main = jnp.einsum("bsd,dk->bsk", x, w_main,
+                      preferred_element_type=ACCUM).astype(dt)
+    gate = jnp.einsum("bsd,dk->bsk", x, w_gate,
+                      preferred_element_type=ACCUM)
+    conv_state = cache.get("conv") if cache else None
+    conv_out, new_conv = _conv4(p["conv"], main, conv_state)
+    conv_act = jax.nn.silu(conv_out.astype(ACCUM)).astype(dt)
+
+    def proj(name, src):
+        w = maybe_quantize(p[name]["kernel"], quant).astype(dt)
+        return jnp.einsum("bsk,khd->bshd", src, w,
+                          preferred_element_type=ACCUM).astype(dt)
+
+    q = proj("q", conv_act)
+    k = proj("k", conv_act)
+    v = proj("v", main)
+    log_i = (jnp.einsum("bsk,kh->bsh", conv_act.astype(ACCUM),
+                        p["igate"]["kernel"].astype(ACCUM))
+             + p["igate"]["bias"].astype(ACCUM))
+    f_pre = (jnp.einsum("bsk,kh->bsh", conv_act.astype(ACCUM),
+                        p["fgate"]["kernel"].astype(ACCUM))
+             + p["fgate"]["bias"].astype(ACCUM))
+    log_f = jax.nn.log_sigmoid(f_pre)
+
+    if cache is not None:
+        state = (cache["C"], cache["n"], cache["m"])
+        h, new_state = _mlstm_chunk(q, k, v, log_f, log_i, state)
+        new_cache = {"C": new_state[0], "n": new_state[1],
+                     "m": new_state[2], "conv": new_conv}
+    else:
+        h, _ = mlstm_cell(q, k, v, log_f, log_i, chunk=chunk)
+        new_cache = None
+
+    # per-head norm, flatten, gate, project down
+    h = rmsnorm({"scale": p["head_norm"]["scale"].reshape(-1)},
+                h.reshape(*h.shape[:2], -1))
+    h = h * jax.nn.silu(gate).astype(dt)
+    w_down = maybe_quantize(p["down"]["kernel"], quant).astype(dt)
+    out = jnp.einsum("bsk,kd->bsd", h, w_down,
+                     preferred_element_type=ACCUM).astype(dt)
+    return out, new_cache
+
+
+def mlstm_cache_specs(batch: int, d: int, n_heads: int, *,
+                      proj_factor: int = 2, conv_width: int = 4) -> dict:
+    d_in = proj_factor * d
+    dh = d_in // n_heads
+    return {
+        "C": jax.ShapeDtypeStruct((batch, n_heads, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, n_heads, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, n_heads), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, conv_width - 1, d_in),
+                                     jnp.bfloat16),
+    }
+
+
+def init_mlstm_cache(batch: int, d: int, n_heads: int, *,
+                     proj_factor: int = 2, conv_width: int = 4) -> dict:
+    d_in = proj_factor * d
+    dh = d_in // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_in), jnp.bfloat16),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_block_specs(d: int, n_heads: int, *, conv_width: int = 4,
+                      ffn_factor: float = 4.0 / 3.0) -> dict:
+    w = d // n_heads
+    ffn = int(d * ffn_factor)
+    gates = {}
+    for g in ("i", "f", "z", "o"):
+        gates[g] = {
+            "kernel": ParamSpec((d, n_heads, w),
+                                ("embed", "heads", "head_dim"), scale=0.02),
+            "rec": ParamSpec((n_heads, w, w), ("heads", "head_dim", None),
+                             scale=0.02),
+            "bias": ParamSpec((n_heads, w), ("heads", "head_dim"),
+                              init="zeros"),
+        }
+    return {
+        "conv": {"kernel": ParamSpec((conv_width, d), (None, "embed")),
+                 "bias": ParamSpec((d,), ("embed",), init="zeros")},
+        "gates": gates,
+        "head_norm": {"scale": ParamSpec((n_heads, w),
+                                         ("heads", "head_dim"),
+                                         init="ones")},
+        "ffn_up": {"kernel": ParamSpec((d, 2 * ffn), ("embed", "mlp"))},
+        "ffn_down": {"kernel": ParamSpec((ffn, d), ("mlp", "embed"))},
+    }
+
+
+def _slstm_scan(p: dict, x_pre: dict, h0, c0, n0, m0):
+    """Sequential sLSTM over time.  x_pre[g]: (B, S, H, W) preactivations."""
+    def step(carry, xt):
+        h, c, n, m = carry                       # (B,H,W) each, fp32
+        pg = {}
+        for g in ("i", "f", "z", "o"):
+            rec = jnp.einsum("bhw,hwv->bhv", h, p["gates"][g]["rec"]
+                             .astype(ACCUM))
+            pg[g] = xt[g] + rec
+        log_f = jax.nn.log_sigmoid(pg["f"])
+        m_new = jnp.maximum(log_f + m, pg["i"])
+        i_p = jnp.exp(pg["i"] - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        z = jnp.tanh(pg["z"])
+        o = jax.nn.sigmoid(pg["o"])
+        c_new = f_p * c + i_p * z
+        n_new = f_p * n + i_p
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    xs = {g: x_pre[g].swapaxes(0, 1) for g in x_pre}   # (S,B,H,W)
+    (h, c, n, m), hs = jax.lax.scan(step, (h0, c0, n0, m0), xs)
+    return hs.swapaxes(0, 1), (h, c, n, m)
+
+
+def slstm_block(p: dict, x: jax.Array, *, n_heads: int,
+                cache: Optional[dict] = None, quant: Optional[str] = None
+                ) -> tuple[jax.Array, Optional[dict]]:
+    """sLSTM block with causal conv and gated FFN.
+
+    cache (decode): {h, c, n, m, conv} — all (B, H, W) fp32 but conv.
+    """
+    dt = x.dtype
+    b, s, d = x.shape
+    w = d // n_heads
+    conv_state = cache.get("conv") if cache else None
+    xc, new_conv = _conv4(p["conv"], x, conv_state)
+    xc = jax.nn.silu(xc.astype(ACCUM))
+
+    x_pre = {}
+    for g in ("i", "f", "z", "o"):
+        src = xc if g in ("i", "f") else x.astype(ACCUM)
+        x_pre[g] = (jnp.einsum("bsd,dhw->bshw", src,
+                               p["gates"][g]["kernel"].astype(ACCUM))
+                    + p["gates"][g]["bias"].astype(ACCUM))
+
+    if cache is not None:
+        carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+        hs, (h, c, n, m) = _slstm_scan(
+            p, {g: x_pre[g] for g in x_pre}, *carry)
+        new_cache = {"h": h, "c": c, "n": n, "m": m, "conv": new_conv}
+    else:
+        zeros = jnp.zeros((b, n_heads, w), ACCUM)
+        m0 = jnp.full((b, n_heads, w), -1e30, ACCUM)
+        hs, _ = _slstm_scan(p, x_pre, zeros, zeros, zeros, m0)
+        new_cache = None
+
+    y = rmsnorm({"scale": p["head_norm"]["scale"].reshape(-1)},
+                hs.reshape(b, s, d).astype(dt))
+    # gated FFN (factor 4/3)
+    w_up = maybe_quantize(p["ffn_up"]["kernel"], quant).astype(dt)
+    u = jnp.einsum("bsd,dk->bsk", y, w_up, preferred_element_type=ACCUM)
+    u1, u2 = jnp.split(u, 2, axis=-1)
+    u = (jax.nn.gelu(u1, approximate=True) * u2).astype(dt)
+    w_dn = maybe_quantize(p["ffn_down"]["kernel"], quant).astype(dt)
+    out = jnp.einsum("bsk,kd->bsd", u, w_dn,
+                     preferred_element_type=ACCUM).astype(dt)
+    return out, new_cache
+
+
+def slstm_cache_specs(batch: int, d: int, n_heads: int, *,
+                      conv_width: int = 4) -> dict:
+    w = d // n_heads
+    f32 = jnp.float32
+    return {
+        "h": jax.ShapeDtypeStruct((batch, n_heads, w), f32),
+        "c": jax.ShapeDtypeStruct((batch, n_heads, w), f32),
+        "n": jax.ShapeDtypeStruct((batch, n_heads, w), f32),
+        "m": jax.ShapeDtypeStruct((batch, n_heads, w), f32),
+        "conv": jax.ShapeDtypeStruct((batch, conv_width - 1, d),
+                                     jnp.bfloat16),
+    }
+
+
+def init_slstm_cache(batch: int, d: int, n_heads: int, *,
+                     conv_width: int = 4) -> dict:
+    w = d // n_heads
+    z = jnp.zeros((batch, n_heads, w), jnp.float32)
+    return {
+        "h": z, "c": z, "n": z,
+        "m": jnp.full((batch, n_heads, w), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d), jnp.bfloat16),
+    }

@@ -1,0 +1,47 @@
+"""Elastic scaling: reshard a checkpoint onto a different mesh.
+
+The checkpoint stores leaves unsharded (see ``repro.checkpoint.ckpt``), so
+scaling a job from mesh A to mesh B is: rebuild the param/opt shardings from
+the SAME logical axes on the new mesh (divisibility pruning adapts
+automatically), then ``device_put`` each restored leaf.  The binding rules
+being the single source of truth (core.binding) is what makes this safe —
+there is no per-mesh layout metadata to migrate.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.launch import shardings as sh
+from repro.nn import module as module_lib
+
+
+def reshard_checkpoint(ckpt: CheckpointManager, cfg, new_mesh: Mesh,
+                       *, step=None) -> tuple[Any, int]:
+    """Restore {params, opt} onto ``new_mesh`` with freshly derived
+    shardings.  Works across any device count whose axes divide (pruned
+    otherwise)."""
+    from repro.models import encdec
+    from repro.nn import transformer
+    from repro.optim import adamw
+
+    rules = sh.rules_for(cfg)
+    if getattr(cfg, "is_encoder_decoder", False):
+        specs = encdec.model_specs(cfg)
+    else:
+        specs = transformer.model_specs(cfg)
+    abstract = module_lib.abstract_tree(specs)
+    axes = module_lib.axes_tree(specs)
+    p_sh = sh.tree_shardings(abstract, axes, new_mesh, rules)
+    o_sh = sh.tree_shardings(adamw.abstract_state(abstract),
+                             adamw.state_axes(axes), new_mesh, rules)
+    like = {"params": abstract, "opt": adamw.abstract_state(abstract)}
+    like_host = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), like)
+    tree, got_step = ckpt.restore(like_host, step,
+                                  shardings={"params": p_sh, "opt": o_sh})
+    return tree, got_step

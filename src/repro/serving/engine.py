@@ -1,0 +1,173 @@
+"""Batched serving engine with continuous batching.
+
+A fixed pool of ``max_batch`` lanes shares one jitted decode step (one
+token per lane per tick).  Requests queue; a free lane prefill-feeds the
+prompt through the decode path (teacher-forced, KV written per token —
+exactly the deployment pattern of a statically scheduled design: ONE
+compiled program, zero dynamic shapes, the OpenHLS discipline), then the
+lane switches to generation.  Finished lanes are immediately refilled from
+the queue — no global barrier between requests.
+
+Per-lane state lives in the batched KV cache; lane resets write zeros into
+that lane's slice.  Works with every decoder architecture in the registry
+(KV, rolling-window, RG-LRU / xLSTM recurrent state) because the cache
+layout is the model's own.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.nn import transformer
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    eos_id: int = -1               # -1: no early stop
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    submit_t: float = 0.0
+    first_token_t: float = 0.0
+    done_t: float = 0.0
+
+
+@dataclasses.dataclass
+class _Lane:
+    req: Optional[Request] = None
+    pos: int = 0
+    feeding: int = 0               # prompt tokens still to feed
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache = transformer.init_cache(cfg, max_batch, max_len)
+        self.lanes = [_Lane() for _ in range(max_batch)]
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._next_rid = 0
+        self._step = jax.jit(
+            lambda p, t, c, q: lm.serve_step(cfg, p, t, c, q))
+        self._ticks = 0
+
+    # -- API -----------------------------------------------------------------
+
+    def submit(self, prompt: list[int], max_new_tokens: int = 32,
+               eos_id: int = -1) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=list(prompt),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      submit_t=time.monotonic())
+        self.queue.append(req)
+        return rid
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
+        while (self.queue or any(l.req for l in self.lanes)) \
+                and self._ticks < max_ticks:
+            self.tick()
+        return self.finished
+
+    # -- internals -------------------------------------------------------------
+
+    def _reset_lane_cache(self, lane_idx: int) -> None:
+        """Reset one lane's cache slice to its init values.
+
+        Necessary for recurrent state (RG-LRU h, xLSTM C/n/m carry across
+        positions — unlike KV entries they are not position-masked) and for
+        rolling-window ``kpos`` sentinels (-1 = empty).  Each leaf's fresh
+        init is written into the lane: stacked leaves carry the lane on
+        axis 1 (after the layer-stack dim), remainder leaves on axis 0.
+        """
+        fresh = transformer.init_cache(self.cfg, 1, self.max_len)
+
+        def put(full, one, axis):
+            idx = [slice(None)] * full.ndim
+            idx[axis] = slice(lane_idx, lane_idx + 1)
+            return full.at[tuple(idx)].set(one.astype(full.dtype))
+
+        self.cache = {
+            "blocks": jax.tree_util.tree_map(
+                lambda f, o: put(f, o, 1), self.cache["blocks"],
+                fresh["blocks"]),
+            "extra": jax.tree_util.tree_map(
+                lambda f, o: put(f, o, 0), self.cache["extra"],
+                fresh["extra"]),
+        }
+
+    def tick(self) -> None:
+        """One engine step: schedule lanes, decode one token for all."""
+        self._ticks += 1
+        # 1) admit queued requests into free lanes
+        for li, lane in enumerate(self.lanes):
+            if lane.req is None and self.queue:
+                req = self.queue.pop(0)
+                lane.req = req
+                lane.pos = 0
+                lane.feeding = len(req.prompt) - 1  # last prompt token decodes
+                self._reset_lane_cache(li)
+
+        # 2) assemble the token batch
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        pos = np.zeros((self.max_batch,), np.int32)
+        for li, lane in enumerate(self.lanes):
+            if lane.req is None:
+                continue
+            req = lane.req
+            if lane.pos < len(req.prompt):
+                tokens[li, 0] = req.prompt[lane.pos]
+            else:
+                tokens[li, 0] = req.output[-1]
+            pos[li] = lane.pos
+
+        # 3) one fused decode step for the whole pool
+        next_tok, self.cache = self._step(self.params, jnp.asarray(tokens),
+                                          self.cache, jnp.asarray(pos))
+        next_tok = np.asarray(next_tok)
+
+        # 4) per-lane bookkeeping
+        for li, lane in enumerate(self.lanes):
+            if lane.req is None:
+                continue
+            req = lane.req
+            lane.pos += 1
+            if lane.pos < len(req.prompt):
+                continue                      # still feeding the prompt
+            tok = int(next_tok[li])
+            if not req.output:
+                req.first_token_t = time.monotonic()
+            req.output.append(tok)
+            done = (len(req.output) >= req.max_new_tokens
+                    or tok == req.eos_id
+                    or lane.pos >= self.max_len - 1)
+            if done:
+                req.done_t = time.monotonic()
+                self.finished.append(req)
+                lane.req = None
+
+    # -- metrics ----------------------------------------------------------------
+
+    def stats(self) -> dict:
+        lat = [r.done_t - r.submit_t for r in self.finished if r.done_t]
+        ttft = [r.first_token_t - r.submit_t for r in self.finished
+                if r.first_token_t]
+        toks = sum(len(r.output) for r in self.finished)
+        return {"requests": len(self.finished), "generated_tokens": toks,
+                "ticks": self._ticks,
+                "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+                "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0}

@@ -1,0 +1,109 @@
+"""BraggNN case-study checks against the paper's §4.2 claims."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Context, emit, frontend, passes, verify
+from repro.core.precision import FP_5_3, FP_5_4
+from repro.core.schedule import list_schedule, partition_stages
+from repro.models import braggnn
+from repro.nn import module
+
+
+@pytest.fixture(scope="module")
+def braggnn_graphs():
+    """Reduced BraggNN (img=7) keeps CI fast; the full s=1/img=11 build is
+    exercised by benchmarks/bench_braggnn.py."""
+    ctx = Context()
+    frontend.braggnn(ctx, s=1, img=7)
+    g_raw = ctx.finalize()
+    g_opt = passes.optimize(g_raw)
+    return g_raw, g_opt
+
+
+def test_scalar_dfg_matches_tensor_model(braggnn_graphs):
+    """The loop-nest DFG and the jnp BraggNN are the same function."""
+    g_raw, _ = braggnn_graphs
+    # scale 0.25: with *untrained* random weights the NLB attention scores
+    # grow with feed scale, and beyond ~|z/4| > 8 the paper's 8th-order
+    # Taylor exp leaves its accurate domain (the DFG and the true-exp
+    # tensor model then diverge by design — trained BraggNN weights keep
+    # scores well inside it, see benchmarks/bench_precision.py).
+    feeds = verify.random_feeds(g_raw, batch=2, seed=0, scale=0.25)
+    out_dfg = emit.evaluate(g_raw, feeds)["dense_3_out"]
+    params = braggnn.params_from_feeds(
+        {k: v[:1] for k, v in feeds.items() if k != "input"})
+    # params_from_feeds takes weights only; drive the tensor model with the
+    # batch of inputs but the FIRST feed's weights -> compare batch row 0
+    x = jnp.asarray(feeds["input"][0])        # (1, 1, img, img)
+    out_t = braggnn.forward(params, x, s=1)
+    np.testing.assert_allclose(out_dfg[0, 0], np.asarray(out_t)[0],
+                               rtol=5e-2, atol=5e-3)
+
+
+def test_optimised_dfg_semantics_preserved(braggnn_graphs):
+    g_raw, g_opt = braggnn_graphs
+    feeds = verify.random_feeds(g_raw, batch=2, seed=1, scale=0.5)
+    a = emit.evaluate(g_raw, feeds)["dense_3_out"]
+    b = emit.evaluate(g_opt, feeds)["dense_3_out"]
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_schedule_structure(braggnn_graphs):
+    _, g_opt = braggnn_graphs
+    sched = list_schedule(g_opt)
+    assert sched.makespan > 0
+    res = sched.resources()
+    assert res["BRAM_ports"] == 0          # the paper's no-BRAM result
+    stages, ii = partition_stages(g_opt, sched, 3)
+    assert len(stages) == 3 and ii <= sched.makespan
+
+
+def test_quantized_functional_model(braggnn_graphs):
+    """(5,4) quantisation stays usably close to fp32 (paper's precision
+    choice), (5,3) degrades further but stays finite."""
+    g_raw, g_opt = braggnn_graphs
+    feeds = verify.random_feeds(g_raw, batch=2, seed=2, scale=0.3)
+    ref = emit.evaluate(g_opt, feeds)["dense_3_out"]
+    q54 = emit.evaluate(g_opt, feeds, fmt=FP_5_4)["dense_3_out"]
+    q53 = emit.evaluate(g_opt, feeds, fmt=FP_5_3)["dense_3_out"]
+    assert np.all(np.isfinite(q54)) and np.all(np.isfinite(q53))
+    scale = np.abs(ref).max() + 1e-6
+    assert np.abs(q54 - ref).max() / scale < 0.35
+    assert np.abs(q53 - ref).max() >= np.abs(q54 - ref).max() * 0.3
+
+
+def test_braggnn_training_converges():
+    """End-to-end substrate check: a few hundred Adam steps on synthetic
+    peaks reduce the localisation loss by >5x (paper's model is trainable
+    in our stack)."""
+    from repro.optim import adamw
+    cfg_img = 11
+    sp = braggnn.specs(1, cfg_img)
+    params = module.init_tree(sp, jax.random.key(0))
+    opt_cfg = adamw.AdamWConfig(peak_lr=3e-3, warmup_steps=10,
+                                total_steps=120, weight_decay=0.0)
+    state = adamw.init_state(params)
+
+    def loss_fn(p, x, y):
+        pred = braggnn.forward(p, x)
+        return jnp.mean((pred - y * 10.0) ** 2)
+
+    @jax.jit
+    def step(p, s, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p2, s2, _ = adamw.apply_updates(opt_cfg, p, g, s)
+        return p2, s2, l
+
+    key = jax.random.key(1)
+    first = last = None
+    for i in range(120):
+        x, y = braggnn.synthetic_peaks(jax.random.fold_in(key, i), 32,
+                                       img=cfg_img)
+        params, state, l = step(params, state, x, y)
+        if first is None:
+            first = float(l)
+        last = float(l)
+    assert last < first / 5, (first, last)

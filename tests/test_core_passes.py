@@ -1,0 +1,137 @@
+"""Pass correctness: each rewrite preserves semantics (behavioural check)
+and achieves its structural goal.  Includes hypothesis property tests over
+randomly generated scalar programs.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Context, emit, frontend, passes, verify
+
+
+def _random_program(draw_ops, n_inputs=4):
+    """Build a graph from a draw of op descriptors."""
+    ctx = Context()
+    mem = ctx.memref("x", (n_inputs,), "input")
+    vals = [mem[i] for i in range(n_inputs)]
+    for kind, a, b in draw_ops:
+        va, vb = vals[a % len(vals)], vals[b % len(vals)]
+        if kind == 0:
+            vals.append(va + vb)
+        elif kind == 1:
+            vals.append(va * vb)
+        elif kind == 2:
+            vals.append(va - vb)
+        elif kind == 3:
+            vals.append(va.max(vb))
+        elif kind == 4:
+            vals.append(ctx.relu(va))
+        else:
+            vals.append(va * va + vb)
+    out = ctx.memref("out", (min(4, len(vals)),), "output")
+    for i in range(out.shape[0]):
+        out[i] = vals[-(i + 1)]
+    return ctx.finalize()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 30),
+                          st.integers(0, 30)), min_size=1, max_size=60))
+def test_optimize_preserves_semantics(ops):
+    """Property: the full pass pipeline never changes program behaviour
+    (the paper's trade: no formal proofs, behavioural verification)."""
+    g = _random_program(ops)
+    g_opt = passes.optimize(g)
+    feeds = verify.random_feeds(g, batch=3, seed=7)
+    out_a = emit.evaluate(g, feeds)
+    out_b = emit.evaluate(g_opt, feeds)
+    for k in out_a:
+        np.testing.assert_allclose(out_a[k], out_b[k], rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 30),
+                          st.integers(0, 30)), min_size=1, max_size=40))
+def test_passes_idempotent(ops):
+    g = passes.optimize(_random_program(ops))
+    g2 = passes.optimize(g)
+    assert len(g2.ops) == len(g.ops)
+
+
+def test_relu_recompose():
+    ctx = Context()
+    x = ctx.memref("x", (4,), "input")
+    out = ctx.memref("out", (4,), "output")
+    frontend.relu_layer(ctx, x, out)
+    g = ctx.finalize()
+    assert any(op.opcode == "select" for op in g.ops)
+    g2 = passes.relu_recompose(g)
+    assert sum(1 for op in g2.ops if op.opcode == "relu") == 4
+    assert not any(op.opcode in ("select", "cmpugt") for op in g2.ops)
+
+
+def test_reduction_tree_reduces_depth():
+    ctx = Context()
+    x = ctx.memref("x", (64,), "input")
+    out = ctx.memref("out", (1,), "output")
+    with ctx.sequential("sum"):
+        acc = x[0]
+        for i in range(1, 64):
+            acc = acc + x[i]
+        out[0] = acc
+    g = ctx.finalize()
+
+    def depth(graph):
+        d = {}
+        best = 0
+        for op in graph.ops:
+            cur = 1 + max((d.get(a, 0) for a in op.args), default=0)
+            if op.result >= 0:
+                d[op.result] = cur
+            best = max(best, cur)
+        return best
+
+    g2 = passes.reduction_tree(g)
+    assert depth(g) == 63
+    assert depth(g2) == 6          # ceil(log2(64))
+    feeds = verify.random_feeds(g, batch=2, seed=0)
+    np.testing.assert_allclose(emit.evaluate(g, feeds)["out"],
+                               emit.evaluate(g2, feeds)["out"], rtol=1e-4)
+
+
+def test_fmac_coalesce():
+    ctx = Context()
+    x = ctx.memref("x", (2,), "input")
+    out = ctx.memref("out", (1,), "output")
+    with ctx.sequential("mac"):
+        out[0] = x[0] * x[1] + x[0]
+    g = passes.fmac_coalesce(ctx.finalize())
+    assert sum(1 for op in g.ops if op.opcode == "fmac") == 1
+    assert not any(op.opcode == "mulf" for op in g.ops)
+
+
+def test_cse_merges_duplicates():
+    ctx = Context()
+    x = ctx.memref("x", (2,), "input")
+    out = ctx.memref("out", (2,), "output")
+    with ctx.sequential("dup"):
+        a = x[0] * x[1]
+        b = x[1] * x[0]       # commutative duplicate
+        out[0] = a + ctx.const(1.0)
+        out[1] = b + ctx.const(1.0)
+    g = ctx.finalize()
+    g2 = passes.cse(g)
+    assert sum(1 for op in g2.ops if op.opcode == "mulf") == 1
+
+
+def test_hoist_globals_checked():
+    ctx = Context()
+    w = ctx.memref("w", (2,), "weight")
+    x = ctx.memref("x", (2,), "input")
+    out = ctx.memref("out", (2,), "output")
+    for (i,) in ctx.parallel(2):
+        out[i] = w[i] * x[i]
+    g = ctx.finalize()
+    passes.hoist_globals_check(g)     # does not raise
+    assert "w" in g.weight_names and "w" in g.inputs

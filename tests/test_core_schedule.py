@@ -1,0 +1,158 @@
+"""Scheduler invariants (paper §3.3), as property tests.
+
+For arbitrary generated programs, any schedule must:
+  * respect data dependencies (consumer starts after producer finishes),
+  * never exceed the per-class unit capacity K in any cycle,
+  * report a makespan equal to the latest op end.
+ALAP compaction must preserve all of the above and the makespan.
+More units can never hurt: makespan is monotone non-increasing in
+``unroll_factor`` (Fig. 4's latency-vs-unroll trend).
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Context, frontend, passes
+from repro.core.ir import DEFAULT_DELAYS, RESOURCE_CLASS
+from repro.core.schedule import list_schedule, partition_stages
+
+
+def _program(ops, width=8):
+    ctx = Context()
+    x = ctx.memref("x", (width,), "input")
+    out = ctx.memref("out", (width,), "output")
+    for (i,) in ctx.parallel(width, label="outer"):
+        acc = x[i]
+        for kind, j in ops:
+            other = x[(i + j) % width]
+            if kind == 0:
+                acc = acc + other
+            elif kind == 1:
+                acc = acc * other
+            elif kind == 2:
+                acc = acc.max(other)
+            else:
+                acc = acc - other
+        out[i] = acc
+    return ctx.finalize()
+
+
+def _check_valid(g, sched, *, capacity=None, pipelined=False):
+    delays = DEFAULT_DELAYS
+    # 1) dependencies
+    ready = {}
+    for op in g.ops:
+        start = sched.start[op.idx]
+        for a in op.args:
+            if a in ready:
+                assert start >= ready[a], (op.idx, op.opcode)
+        if op.result >= 0:
+            ready[op.result] = start + delays.get(op.opcode, 0)
+    # 2) capacity per class per cycle
+    if capacity is not None:
+        from collections import defaultdict
+        busy = defaultdict(list)     # class -> list of (start, end)
+        for op in g.ops:
+            cls = RESOURCE_CLASS.get(op.opcode)
+            if cls is None or cls == "port":
+                continue
+            d = delays.get(op.opcode, 0)
+            occ = 1 if pipelined else max(d, 1)
+            busy[cls].append((sched.start[op.idx],
+                              sched.start[op.idx] + occ))
+        for cls, spans in busy.items():
+            events = []
+            for s, e in spans:
+                events.append((s, 1))
+                events.append((e, -1))
+            events.sort()
+            live = peak = 0
+            for _, delta in events:
+                live += delta
+                peak = max(peak, live)
+            assert peak <= capacity, (cls, peak, capacity)
+    # 3) makespan
+    ends = [sched.start[op.idx] + delays.get(op.opcode, 0) for op in g.ops]
+    assert sched.makespan == max(ends)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7)),
+                min_size=1, max_size=24))
+def test_schedule_valid_pool(ops):
+    g = passes.optimize(_program(ops))
+    sched = list_schedule(g, binding="pool")
+    _check_valid(g, sched, capacity=g.K())
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7)),
+                min_size=1, max_size=24))
+def test_schedule_valid_rank(ops):
+    g = passes.optimize(_program(ops))
+    sched = list_schedule(g, binding="rank")
+    _check_valid(g, sched)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7)),
+                min_size=2, max_size=20),
+       st.integers(1, 4))
+def test_unroll_monotonicity(ops, k):
+    """More lanes never increases the interval count (Fig. 4 trend)."""
+    g = passes.optimize(_program(ops))
+    m1 = list_schedule(g, unroll_factor=k).makespan
+    m2 = list_schedule(g, unroll_factor=2 * k).makespan
+    m_full = list_schedule(g).makespan
+    assert m2 <= m1
+    assert m_full <= m2
+
+
+def test_alap_keeps_makespan_and_validity():
+    ctx = Context()
+    x = ctx.memref("x", (32,), "input")
+    out = ctx.memref("out", (1,), "output")
+    with ctx.sequential("sum"):
+        acc = x[0]
+        for i in range(1, 32):
+            acc = acc + x[i] * x[(i + 1) % 32]
+        out[0] = acc
+    g = passes.optimize(ctx.finalize())
+    s_no = list_schedule(g, alap_compact=False)
+    s_yes = list_schedule(g, alap_compact=True)
+    assert s_yes.makespan == s_no.makespan
+    _check_valid(g, s_yes, capacity=g.K())
+    # ALAP can only shrink register pressure
+    assert s_yes.peak_live <= s_no.peak_live
+
+
+def test_pipeline_stage_partition():
+    ctx = Context()
+    frontend.braggnn(ctx, s=1, img=7)     # reduced BraggNN
+    g = passes.optimize(ctx.finalize())
+    sched = list_schedule(g)
+    stages, ii = partition_stages(g, sched, 3)
+    assert len(stages) == 3
+    assert sum(len(s) for s in stages) == len(sched.nest_spans)
+    assert 0 < ii <= sched.makespan
+
+
+def test_no_bram_in_forwarding_mode():
+    """The paper's headline: OpenHLS designs use zero BRAM (all forwarding)."""
+    ctx = Context()
+    a = ctx.memref("a", (4, 4), "input")
+    b = ctx.memref("b", (4, 4), "input")
+    c = ctx.memref("c", (4, 4), "input")
+    out = ctx.memref("out", (4, 4), "output")
+    frontend.addmm(ctx, a, b, c, out)
+    g = passes.optimize(ctx.finalize())
+    assert list_schedule(g).resources()["BRAM_ports"] == 0
+
+    ctx2 = Context(forward=False)
+    a2 = ctx2.memref("a", (4, 4), "input")
+    b2 = ctx2.memref("b", (4, 4), "input")
+    c2 = ctx2.memref("c", (4, 4), "input")
+    out2 = ctx2.memref("out", (4, 4), "output")
+    frontend.addmm(ctx2, a2, b2, c2, out2)
+    g2 = ctx2.finalize()
+    assert list_schedule(g2).resources()["BRAM_ports"] > 0

@@ -1,0 +1,64 @@
+"""Data pipeline: seekability, host sharding, prefetch semantics."""
+
+import numpy as np
+
+from repro.data.pipeline import DataConfig, SyntheticTokenPipeline
+
+
+def test_seekable_and_deterministic():
+    a = SyntheticTokenPipeline(DataConfig(seq_len=32, global_batch=4,
+                                          vocab_size=1000, seed=7))
+    b = SyntheticTokenPipeline(DataConfig(seq_len=32, global_batch=4,
+                                          vocab_size=1000, seed=7))
+    np.testing.assert_array_equal(a.batch_at(5)["tokens"],
+                                  b.batch_at(5)["tokens"])
+    assert not np.array_equal(a.batch_at(5)["tokens"],
+                              a.batch_at(6)["tokens"])
+
+
+def test_targets_are_shifted_tokens():
+    p = SyntheticTokenPipeline(DataConfig(seq_len=16, global_batch=2,
+                                          vocab_size=100))
+    b = p.batch_at(0)
+    assert b["tokens"].shape == (2, 16)
+    assert b["targets"].shape == (2, 16)
+    # next-token: targets[t] is the stream one step ahead — verify by
+    # reconstructing from the same seed
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_host_sharding_disjoint_and_covering():
+    full = SyntheticTokenPipeline(DataConfig(seq_len=8, global_batch=4,
+                                             vocab_size=50, num_hosts=1))
+    h0 = SyntheticTokenPipeline(DataConfig(seq_len=8, global_batch=4,
+                                           vocab_size=50, num_hosts=2,
+                                           host_id=0))
+    h1 = SyntheticTokenPipeline(DataConfig(seq_len=8, global_batch=4,
+                                           vocab_size=50, num_hosts=2,
+                                           host_id=1))
+    assert h0.local_batch == h1.local_batch == 2
+    b0, b1 = h0.batch_at(3), h1.batch_at(3)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    del full
+
+
+def test_prefetch_in_order_and_seek():
+    p = SyntheticTokenPipeline(DataConfig(seq_len=8, global_batch=2,
+                                          vocab_size=64, prefetch=2))
+    p.seek(0)
+    for step in range(4):
+        got = p.get(step)
+        np.testing.assert_array_equal(got["tokens"],
+                                      p.batch_at(step)["tokens"])
+    # rewind (restart path)
+    p.seek(1)
+    got = p.get(1)
+    np.testing.assert_array_equal(got["tokens"], p.batch_at(1)["tokens"])
+    p.stop()
+
+
+def test_vocab_bounds():
+    p = SyntheticTokenPipeline(DataConfig(seq_len=64, global_batch=4,
+                                          vocab_size=97))
+    b = p.batch_at(0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 97

@@ -1,0 +1,85 @@
+"""FloPoCo (wE,wF) emulation properties (paper §3, §4.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import precision
+from repro.core.precision import (FP_5_3, FP_5_4, FP_5_11, FloatFormat,
+                                  exponent_histogram, quantize, quantize_np,
+                                  required_exponent_bits, ste_quantize)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(-1e4, 1e4, allow_nan=False),
+       st.integers(3, 8), st.integers(2, 10))
+def test_quantize_idempotent(x, e, m):
+    fmt = FloatFormat(e, m)
+    q1 = quantize_np(np.float32(x), fmt)
+    q2 = quantize_np(q1, fmt)
+    np.testing.assert_array_equal(q1, q2)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(-1e3, 1e3, allow_nan=False))
+def test_quantize_relative_error_bound(x):
+    """RNE to wF fraction bits: |q(x)-x| <= 2^-(wF+1) * 2^exp(x) for
+    in-range normals."""
+    fmt = FP_5_4
+    if abs(x) < fmt.min_normal or abs(x) > fmt.max_value:
+        return
+    q = float(quantize_np(np.float32(x), fmt))
+    ulp = 2.0 ** (np.floor(np.log2(abs(x)))) * 2.0 ** (-fmt.man_bits)
+    assert abs(q - x) <= ulp / 2 + 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(-13, 14))
+def test_powers_of_two_exact(e):
+    fmt = FP_5_4
+    x = np.float32(2.0 ** e)
+    assert float(quantize_np(x, fmt)) == float(x)
+
+
+def test_flush_to_zero_and_saturate():
+    fmt = FP_5_4
+    tiny = np.float32(fmt.min_normal * 0.4)
+    assert float(quantize_np(tiny, fmt)) == 0.0
+    huge = np.float32(fmt.max_value * 8)
+    assert float(quantize_np(huge, fmt)) == fmt.max_value
+    assert float(quantize_np(-huge, fmt)) == -fmt.max_value
+
+
+def test_wire_bits_match_paper():
+    """(5,4) occupies 12 wires: the paper's SLL computation (§4.2)."""
+    assert FP_5_4.wire_bits == 12
+    assert FP_5_3.wire_bits == 11
+    assert FP_5_11.wire_bits == 19
+    # paper: (1x16x9x9 + 1x8x9x9) x 12 = 23,328 SLLs > 23,040 available
+    assert (16 * 9 * 9 + 8 * 9 * 9) * FP_5_4.wire_bits == 23_328
+    assert (16 * 9 * 9 + 8 * 9 * 9) * FP_5_3.wire_bits == 21_384  # < 23,040
+
+
+def test_jnp_and_np_quantizers_agree():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 10, size=(256,)).astype(np.float32)
+    a = quantize_np(x, FP_5_3)
+    b = np.asarray(quantize(jnp.asarray(x), FP_5_3))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_ste_gradient_is_identity():
+    x = jnp.linspace(-2.0, 2.0, 16)
+    g = jax.grad(lambda v: jnp.sum(ste_quantize(v, 5, 4) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+def test_exponent_histogram_and_required_bits():
+    """Fig. 7 logic: exponent spread -> smallest sufficient wE."""
+    w = {"a": jnp.asarray([0.5, 0.25, 1.0, 2.0])}      # exps -1..1
+    hist = exponent_histogram(w)
+    assert hist == {-1: 1, -2: 1, 0: 1, 1: 1}
+    assert required_exponent_bits(hist) <= 3
+    wide = {"a": jnp.asarray([2.0 ** -14, 2.0 ** 15])}
+    assert required_exponent_bits(exponent_histogram(wide)) == 5
