@@ -15,10 +15,8 @@ its tool time explodes with u while symbolic interpretation stays flat.
 
 from __future__ import annotations
 
-import time
-
-from repro.core import Context, frontend, passes
-from repro.core.schedule import CLOCK_NS, list_schedule
+from repro.core import CompilerConfig, CompilerDriver, DesignCache, frontend
+from repro.core.schedule import CLOCK_NS
 
 UNROLL_FACTORS = (1, 4, 16, 64, 256, 1024)
 
@@ -63,38 +61,36 @@ def _builders():
 
 
 def run() -> list[dict]:
+    # sweep workload: no config is ever re-compiled, so keep the memory
+    # cache tiny instead of pinning every design for the whole sweep
+    driver = CompilerDriver(cache=DesignCache(max_memory_entries=2))
     rows = []
     for name, build in _builders().items():
-        # OpenHLS design
-        t0 = time.perf_counter()
-        ctx = Context(forward=True)
-        build(ctx)
-        g = passes.optimize(ctx.finalize())
-        sched = list_schedule(g)
-        t_openhls = time.perf_counter() - t0
-        res = sched.resources()
+        # OpenHLS design: one CompilerDriver.compile call is the whole flow
+        design = driver.compile(build, name=name)
+        res = design.schedule.resources()
         rows.append({
             "layer": name, "design": "openhls", "unroll": "full",
-            "intervals": sched.makespan,
-            "latency_us": sched.makespan * CLOCK_NS * 1e-3,
+            "intervals": design.makespan,
+            "latency_us": design.latency_us,
             "dsp": res["DSP"], "ff": res["FF"],
-            "bram_ports": res["BRAM_ports"], "tool_s": round(t_openhls, 3),
+            "bram_ports": res["BRAM_ports"],
+            "tool_s": round(design.timings["total_s"], 3),
         })
-        # Vitis-like baseline at increasing unroll
-        ctx2 = Context(forward=False)
-        build(ctx2)
-        g2 = ctx2.finalize()
+        # Vitis-like baseline at increasing unroll: trace once in
+        # no-forwarding mode, then one config (= one cache entry) per u
+        g2 = driver.trace(build, forward=False)
         for u in UNROLL_FACTORS:
-            t0 = time.perf_counter()
-            sched_u = list_schedule(g2, unroll_factor=u)
-            t_u = time.perf_counter() - t0
-            res_u = sched_u.resources()
+            cfg = CompilerConfig(pipeline=(), forward=False, unroll_factor=u)
+            d_u = driver.compile(g2, name=f"{name}_u{u}", config=cfg)
+            res_u = d_u.schedule.resources()
             rows.append({
                 "layer": name, "design": "baseline", "unroll": u,
-                "intervals": sched_u.makespan,
-                "latency_us": sched_u.makespan * CLOCK_NS * 1e-3,
+                "intervals": d_u.makespan,
+                "latency_us": d_u.latency_us,
                 "dsp": res_u["DSP"], "ff": res_u["FF"],
-                "bram_ports": res_u["BRAM_ports"], "tool_s": round(t_u, 3),
+                "bram_ports": res_u["BRAM_ports"],
+                "tool_s": round(d_u.timings["schedule_s"], 3),
             })
     return rows
 

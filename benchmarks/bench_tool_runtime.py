@@ -3,44 +3,42 @@
 Fig. 2's point: static store-load forwarding over a fully unrolled conv
 explodes (577,419 s at 128x128 trip count 147,456); symbolic interpretation
 unrolls the same nests in seconds.  We sweep the conv image size and report
-our full pipeline time (interpret + passes + schedule) and the op count —
+the full ``CompilerDriver.compile`` stage timings (trace / passes /
+schedule) plus the per-pass wall-time breakdown from the ``PassReport``s —
 the trend line that replaces the paper's hours-scale curve.
 """
 
 from __future__ import annotations
 
-import time
-
-from repro.core import Context, frontend, passes
-from repro.core.schedule import list_schedule
+from repro.core import CompilerDriver, DesignCache, frontend
 
 IMAGE_SIZES = (8, 16, 32, 64, 96, 128)
 
 
 def run() -> list[dict]:
+    # sweep workload: each size compiles once; don't pin all designs
+    driver = CompilerDriver(cache=DesignCache(max_memory_entries=1))
     rows = []
     for img in IMAGE_SIZES:
-        t0 = time.perf_counter()
-        ctx = Context()
-        x = ctx.memref("input", (1, 1, img, img), "input")
-        w = ctx.memref("w", (1, 1, 3, 3), "weight")
-        out = ctx.memref("out", (1, 1, img, img), "output")
-        frontend.conv2d(ctx, x, w, None, out, padding=1)
-        g = ctx.finalize()
-        t_interp = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        g2 = passes.optimize(g)
-        t_passes = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        sched = list_schedule(g2)
-        t_sched = time.perf_counter() - t0
+        def build(ctx, img=img):
+            x = ctx.memref("input", (1, 1, img, img), "input")
+            w = ctx.memref("w", (1, 1, 3, 3), "weight")
+            out = ctx.memref("out", (1, 1, img, img), "output")
+            frontend.conv2d(ctx, x, w, None, out, padding=1)
+
+        design = driver.compile(build, name=f"conv_{img}")
+        t = design.timings
         rows.append({
             "image": img, "trip_count": img * img * 9,
-            "ops": len(g.ops), "ops_opt": len(g2.ops),
-            "interp_s": round(t_interp, 3), "passes_s": round(t_passes, 3),
-            "schedule_s": round(t_sched, 3),
-            "total_s": round(t_interp + t_passes + t_sched, 3),
-            "intervals": sched.makespan,
+            "ops": len(design.graph_raw.ops),
+            "ops_opt": len(design.graph_opt.ops),
+            "interp_s": round(t["trace_s"], 3),
+            "passes_s": round(t["passes_s"], 3),
+            "schedule_s": round(t["schedule_s"], 3),
+            "total_s": round(t["total_s"], 3),
+            "intervals": design.makespan,
+            "per_pass_s": {k: round(v, 3)
+                           for k, v in design.pass_time_by_name().items()},
         })
     return rows
 
@@ -54,6 +52,9 @@ def main(print_csv: bool = True) -> list[dict]:
             print(f"{r['image']},{r['trip_count']},{r['ops']},"
                   f"{r['ops_opt']},{r['interp_s']},{r['passes_s']},"
                   f"{r['schedule_s']},{r['total_s']},{r['intervals']}")
+        print("# per-pass wall time (s), largest image:")
+        for k, v in rows[-1]["per_pass_s"].items():
+            print(f"#   {k}: {v}")
         # the paper's 128x128 static-analysis time for contrast
         print("# paper Fig.2: static -affine-scalrep at 128x128 = 577,419 s")
     return rows

@@ -8,17 +8,26 @@ then serves batched peak-localisation requests through the fused (5,4)
 reduced-precision path and reports throughput.
 """
 
+import os
+import tempfile
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Context, frontend, list_schedule, partition_stages, passes
+from repro.core import CompilerDriver, frontend
 from repro.core.schedule import CLOCK_NS
 from repro.models import braggnn
 from repro.nn import module
 from repro.optim import adamw
+
+#: On-disk design cache: the second run of this example (and any other
+#: consumer compiling BraggNN(s=1)) serves the schedule from disk.
+#: Per-user path — cache entries are pickles, never share them.
+_UID = os.getuid() if hasattr(os, "getuid") else "u"
+CACHE_DIR = Path(tempfile.gettempdir()) / f"repro_design_cache_{_UID}"
 
 
 def main() -> None:
@@ -42,13 +51,17 @@ def main() -> None:
         params, state, l = step(params, state, x, y)
     print(f"trained BraggNN: loss {float(l):.4f}")
 
-    # --- the OpenHLS schedule (paper's deployment artifact) ----------------
-    ctx = Context()
-    frontend.braggnn(ctx, s=1)
-    g = passes.optimize(ctx.finalize())
-    sched = list_schedule(g)
-    _, ii = partition_stages(g, sched, 3)
-    print(f"OpenHLS schedule: {sched.makespan} intervals total, 3-stage "
+    # --- the OpenHLS schedule (paper's deployment artifact), served from
+    # --- the design cache on warm runs -------------------------------------
+    driver = CompilerDriver(cache_dir=CACHE_DIR)
+    t0 = time.perf_counter()
+    design = driver.compile(lambda ctx: frontend.braggnn(ctx, s=1),
+                            name="braggnn_s1")
+    compile_s = time.perf_counter() - t0
+    _, ii = design.partition(3)
+    source = "cache" if driver.cache.hits else "cold compile"
+    print(f"OpenHLS schedule ({source}, {compile_s:.1f}s): "
+          f"{design.makespan} intervals total, 3-stage "
           f"II={ii} -> {ii * CLOCK_NS * 1e-3:.2f} us/sample "
           f"(paper: 1238 total, II=480 -> 4.8 us/sample)")
 

@@ -2,53 +2,62 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a conv2d loop nest, symbolically interprets it into an SSA DFG
-(store-load forwarding included), optimises, schedules, behaviourally
-verifies, quantises to FloPoCo (5,4), and runs the emitted SIMD design.
+One ``CompilerDriver.compile()`` call runs the whole Fig. 1 flow: the
+conv2d loop nest is symbolically interpreted into an SSA DFG (store-load
+forwarding included), optimised, scheduled, and bundled as a
+``CompiledDesign``.  We then behaviourally verify it, quantise to FloPoCo
+(5,4), and run the emitted SIMD design.
 """
 
 import numpy as np
 
-from repro.core import (Context, FP_5_4, emit, frontend, list_schedule,
-                        passes, verify)
+from repro.core import CompilerDriver, FP_5_4, frontend
 
 
-def main() -> None:
+def build(ctx) -> None:
     # 1. describe the DNN operation as an scf-style loop nest
-    ctx = Context()
     x = ctx.memref("input", (1, 3, 16, 16), "input")
     w = ctx.memref("weight", (8, 3, 3, 3), "weight")
     b = ctx.memref("bias", (8,), "weight")
     out = ctx.memref("out", (1, 8, 14, 14), "output")
     frontend.conv2d(ctx, x, w, b, out)
 
-    # 2. symbolic interpretation -> fully unrolled SSA DFG
-    g = ctx.finalize()
-    print(f"raw DFG:      {len(g.ops):6d} ops "
+
+def main() -> None:
+    # 2. compile: trace -> passes -> schedule, one entrypoint
+    driver = CompilerDriver()
+    design = driver.compile(build, name="conv2d_quickstart")
+    print(f"raw DFG:      {len(design.graph_raw.ops):6d} ops "
           f"(no loads/stores — forwarding is built in)")
+    print(f"optimised:    {len(design.graph_opt.ops):6d} ops  "
+          f"{design.graph_opt.op_histogram()}")
+    for rep in design.pass_reports:
+        if rep.ops_delta:
+            print(f"   pass {rep.summary()}")
+    print(f"schedule:     {design.makespan} intervals @10ns = "
+          f"{design.latency_us:.2f} us; resources "
+          f"{design.schedule.resources()}")
 
-    # 3. optimisation passes (paper §3.2)
-    g = passes.optimize(g)
-    print(f"optimised:    {len(g.ops):6d} ops  {g.op_histogram()}")
-
-    # 4. resource-constrained list scheduling (paper §3.3)
-    sched = list_schedule(g)
-    print(f"schedule:     {sched.makespan} intervals @10ns = "
-          f"{sched.latency_us:.2f} us; resources {sched.resources()}")
-
-    # 5. behavioural verification incl. the FloPoCo (5,4) functional model
-    feeds = verify.random_feeds(g, batch=4, seed=0)
-    ref = emit.evaluate(g, feeds)
-    q54 = emit.evaluate(g, feeds, fmt=FP_5_4)
+    # 3. behavioural verification incl. the FloPoCo (5,4) functional model
+    from repro.core import verify
+    feeds = verify.random_feeds(design.graph_opt, batch=4, seed=0)
+    ref = design.evaluate(feeds)
+    q54 = design.evaluate(feeds, fmt=FP_5_4)
     print(f"(5,4) max abs deviation vs fp32: "
           f"{np.max(np.abs(ref['out'] - q54['out'])):.4f}")
 
-    # 6. emitted SIMD design (jittable) matches the functional model
+    # 4. emitted SIMD design (jittable) matches the functional model
     import jax
-    fn = jax.jit(emit.to_jax_fn(g))
+    fn = jax.jit(design.jax_fn())
     got = np.asarray(fn(feeds)["out"])
     np.testing.assert_allclose(got, ref["out"], rtol=1e-4, atol=1e-5)
     print("emitted SIMD design matches the functional simulation  [OK]")
+
+    # 5. a second compile of the same program is a cache hit
+    driver.compile(build, name="conv2d_quickstart")
+    print(f"design cache: {driver.cache.hits} hit(s), "
+          f"{driver.cache.misses} miss(es), hash "
+          f"{design.design_hash[:12]}")
 
 
 if __name__ == "__main__":

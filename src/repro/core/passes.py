@@ -279,25 +279,15 @@ def optimize(g: Graph, *, pipeline: Sequence[str] = DEFAULT_PIPELINE,
              tree_threshold: int = 4, max_rounds: int = 4) -> Graph:
     """Run the standard pass pipeline to a fixpoint (the OpenHLS 'opt' flow).
 
-    Iterated because passes expose each other's opportunities (e.g. DCE
-    drops a second use of a mul, enabling FMAC coalescing next round).
+    Compatibility wrapper: the flow now lives in
+    ``repro.core.pipeline.PassManager`` (decorator-registered passes,
+    per-pass ``PassReport`` instrumentation, fixpoint driving).  This
+    wrapper produces bit-identical graphs and is kept for callers that only
+    want the optimised graph.
     """
-    hoist_globals_check(g)
-    for _ in range(max_rounds):
-        before = len(g.ops)
-        for name in pipeline:
-            if name == "cse":
-                g = cse(g)
-            elif name == "relu_recompose":
-                g = relu_recompose(g)
-            elif name == "reduction_tree":
-                g = reduction_tree(g, threshold=tree_threshold)
-            elif name == "fmac_coalesce":
-                g = fmac_coalesce(g)
-            elif name == "dce":
-                g = dce(g)
-            else:
-                raise ValueError(f"unknown pass {name}")
-        if len(g.ops) == before:
-            break
+    from repro.core.pipeline import PassManager  # deferred: avoids cycle
+    pm = PassManager(
+        pipeline, max_rounds=max_rounds,
+        pass_options={"reduction_tree": {"threshold": tree_threshold}})
+    g, _reports = pm.run(g)
     return g

@@ -1,0 +1,514 @@
+"""Flow orchestration: PassManager + CompilerDriver (paper Fig. 1).
+
+The paper's pipeline — trace (symbolic interpretation) -> DFG ->
+transformations -> scheduling -> emission -> behavioural verification —
+lives here as a single orchestrated flow instead of being re-stitched by
+every consumer:
+
+  * ``register_pass``   — decorator-based pass registry.  A pass is any
+                          ``Graph -> Graph`` rewrite; options are keyword
+                          arguments (e.g. ``reduction_tree``'s threshold).
+  * ``PassManager``     — runs a named pipeline to a fixpoint with per-pass
+                          instrumentation: op-histogram deltas, wall time,
+                          and optional ``topo_check`` / behavioural
+                          spot-verify hooks.  Produces one ``PassReport``
+                          per pass application.
+  * ``CompilerDriver``  — ``compile()`` runs trace -> optimize -> schedule
+                          (emission is lazy) and returns a
+                          ``CompiledDesign`` bundling every artifact plus a
+                          content hash.  Designs are cached in memory and
+                          optionally on disk keyed by that hash, so repeated
+                          compiles (serving warm-up, benchmark sweeps) are
+                          free.
+
+``passes.optimize`` remains as a thin compatibility wrapper over
+``PassManager`` — the two produce bit-identical graphs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import pickle
+import time
+from pathlib import Path
+from typing import Callable, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import emit, passes
+from repro.core.interp import Context
+from repro.core.ir import Graph
+from repro.core.precision import FloatFormat
+from repro.core.schedule import Schedule, list_schedule, partition_stages
+
+# ---------------------------------------------------------------------------
+# Pass registry
+# ---------------------------------------------------------------------------
+
+#: Folded into every design hash: bump when Graph/Schedule/CompiledDesign
+#: layout or pass semantics change, so stale on-disk pickles from older
+#: code versions become cache misses instead of loading into incompatible
+#: objects.
+CACHE_FORMAT_VERSION = 1
+
+#: name -> Graph-rewriting callable.  Populated by ``register_pass``.
+PASS_REGISTRY: dict[str, Callable[..., Graph]] = {}
+
+
+def register_pass(name: str) -> Callable[[Callable[..., Graph]], Callable[..., Graph]]:
+    """Register ``fn`` as a named pass usable in any pipeline.
+
+    ``fn(g, **options) -> Graph`` must return a rewritten graph whose
+    program order is a valid topological order (``Rewriter.finish`` already
+    guarantees this for the built-in passes).
+    """
+    def deco(fn: Callable[..., Graph]) -> Callable[..., Graph]:
+        if name in PASS_REGISTRY:
+            raise ValueError(f"pass {name!r} already registered")
+        PASS_REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+# The paper's §3.2 inventory, registered under the names the string pipeline
+# always used so existing ``pipeline=(...)`` arguments keep working.
+register_pass("cse")(passes.cse)
+register_pass("relu_recompose")(passes.relu_recompose)
+register_pass("reduction_tree")(passes.reduction_tree)
+register_pass("fmac_coalesce")(passes.fmac_coalesce)
+register_pass("dce")(passes.dce)
+
+DEFAULT_PIPELINE: tuple[str, ...] = tuple(passes.DEFAULT_PIPELINE)
+
+
+# ---------------------------------------------------------------------------
+# Per-pass instrumentation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PassReport:
+    """Instrumentation for one application of one pass."""
+
+    name: str
+    round: int
+    ops_before: int
+    ops_after: int
+    hist_before: dict[str, int]
+    hist_after: dict[str, int]
+    wall_s: float
+    topo_ok: Optional[bool] = None       # None = check not requested
+    spot_err: Optional[float] = None     # None = spot-verify not requested
+
+    @property
+    def ops_delta(self) -> int:
+        return self.ops_after - self.ops_before
+
+    def hist_delta(self) -> dict[str, int]:
+        """Per-opcode op-count change (only non-zero entries)."""
+        keys = set(self.hist_before) | set(self.hist_after)
+        delta = {k: self.hist_after.get(k, 0) - self.hist_before.get(k, 0)
+                 for k in sorted(keys)}
+        return {k: v for k, v in delta.items() if v}
+
+    def summary(self) -> str:
+        d = self.hist_delta()
+        extra = f" {d}" if d else ""
+        return (f"[round {self.round}] {self.name}: "
+                f"{self.ops_before} -> {self.ops_after} ops "
+                f"({self.wall_s * 1e3:.1f} ms){extra}")
+
+
+def behavioural_spot_check(*, batch: int = 2, seed: int = 0,
+                           scale: float = 0.5) -> Callable[[Graph, Graph, str], float]:
+    """Build a spot-verify hook: evaluate both graphs on tiny random feeds.
+
+    Returns max-abs deviation of the rewritten graph vs its input graph —
+    the per-pass miniature of the paper's behavioural testbenches.  Imported
+    lazily by ``PassManager`` when ``spot_verify=True``.
+    """
+    def check(g_before: Graph, g_after: Graph, name: str) -> float:
+        from repro.core import verify
+        feeds = verify.random_feeds(g_before, batch=batch, seed=seed,
+                                    scale=scale)
+        out_a = emit.evaluate(g_before, feeds)
+        out_b = emit.evaluate(g_after, feeds)
+        err = 0.0
+        for k in out_a:
+            err = max(err, float(np.max(np.abs(out_a[k] - out_b[k]))))
+        return err
+    return check
+
+
+class PassManager:
+    """Drives a named pass pipeline to a fixpoint with instrumentation.
+
+    Fixpoint criterion matches the historical ``passes.optimize``: rounds
+    repeat (up to ``max_rounds``) until a full round leaves the op count
+    unchanged — passes expose each other's opportunities (e.g. DCE drops a
+    second use of a mul, enabling FMAC coalescing next round).
+    """
+
+    def __init__(
+        self,
+        pipeline: Sequence[str] = DEFAULT_PIPELINE,
+        *,
+        max_rounds: int = 4,
+        pass_options: Optional[dict[str, dict]] = None,
+        topo_check: bool = False,
+        spot_verify: Union[bool, Callable[[Graph, Graph, str], float]] = False,
+    ):
+        unknown = [n for n in pipeline if n not in PASS_REGISTRY]
+        if unknown:
+            raise ValueError(
+                f"unknown pass {unknown[0]!r}; registered: "
+                f"{sorted(PASS_REGISTRY)}")
+        self.pipeline = tuple(pipeline)
+        self.max_rounds = max_rounds
+        self.pass_options = dict(pass_options or {})
+        self.topo_check = topo_check
+        if spot_verify is True:
+            spot_verify = behavioural_spot_check()
+        self.spot_verify = spot_verify or None
+
+    def run(self, g: Graph) -> tuple[Graph, list[PassReport]]:
+        passes.hoist_globals_check(g)
+        reports: list[PassReport] = []
+        for rnd in range(self.max_rounds):
+            before = len(g.ops)
+            for name in self.pipeline:
+                fn = PASS_REGISTRY[name]
+                opts = self.pass_options.get(name, {})
+                hist_before = g.op_histogram()
+                n_before = len(g.ops)
+                t0 = time.perf_counter()
+                g_new = fn(g, **opts)
+                wall = time.perf_counter() - t0
+                rep = PassReport(
+                    name=name, round=rnd, ops_before=n_before,
+                    ops_after=len(g_new.ops), hist_before=hist_before,
+                    hist_after=g_new.op_histogram(), wall_s=wall)
+                if self.topo_check:
+                    try:
+                        g_new.topo_check()
+                        rep.topo_ok = True
+                    except ValueError:
+                        rep.topo_ok = False
+                        reports.append(rep)
+                        raise
+                if self.spot_verify is not None:
+                    rep.spot_err = self.spot_verify(g, g_new, name)
+                reports.append(rep)
+                g = g_new
+            if len(g.ops) == before:
+                break
+        return g, reports
+
+
+# ---------------------------------------------------------------------------
+# Compile configuration + artifact
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CompilerConfig:
+    """Everything that determines the compiled design besides the program.
+
+    Hashable and canonically serialisable — it is folded into the design
+    hash, so changing any field is a cache miss.
+    """
+
+    pipeline: tuple[str, ...] = DEFAULT_PIPELINE
+    tree_threshold: int = 4
+    max_rounds: int = 4
+    forward: bool = True                 # store-load forwarding in the trace
+    binding: str = "pool"
+    unroll_factor: Optional[int] = None
+    ports_per_array: int = 2
+    pipelined_units: bool = False
+    alap_compact: bool = True
+    topo_check: bool = False
+    spot_verify: bool = False
+
+    def pass_manager(self) -> PassManager:
+        return PassManager(
+            self.pipeline, max_rounds=self.max_rounds,
+            pass_options={"reduction_tree": {"threshold": self.tree_threshold}},
+            topo_check=self.topo_check, spot_verify=self.spot_verify)
+
+    def key(self) -> str:
+        """Canonical string folded into the design hash."""
+        return repr(tuple(sorted(dataclasses.asdict(self).items())))
+
+
+def graph_fingerprint(g: Graph) -> str:
+    """Content hash of a DFG: ops, constants and interface tables.
+
+    Two structurally identical graphs (same program traced twice) produce
+    the same fingerprint — value ids are deterministic under tracing.
+    Memoised on the graph object: graphs are frozen after ``finalize`` /
+    ``Rewriter.finish``, and benchmark sweeps hash the same traced graph
+    once per config.
+    """
+    cached = getattr(g, "_fingerprint", None)
+    if cached is not None:
+        return cached
+    h = hashlib.sha256()
+    for op in g.ops:
+        h.update(f"{op.opcode}|{op.args}|{op.result}|{op.nest}|{op.rank}|"
+                 f"{op.array};".encode())
+    h.update(repr(sorted(g.consts.items())).encode())
+    for label, tables in (("in", g.inputs), ("out", g.outputs)):
+        for name in sorted(tables):
+            h.update(f"{label}:{name}:{sorted(tables[name].items())}".encode())
+    h.update(repr(sorted(g.weight_names)).encode())
+    h.update(repr(sorted(g.nest_parallel_space.items())).encode())
+    digest = h.hexdigest()
+    g._fingerprint = digest
+    return digest
+
+
+@dataclasses.dataclass
+class CompiledDesign:
+    """The full artifact of one ``CompilerDriver.compile`` run.
+
+    Bundles the raw (traced) graph, the optimised graph, the resource-
+    constrained ``Schedule``, per-pass ``PassReport``s, stage timings, and
+    the content hash that keys the design cache.  The emitted jittable SIMD
+    function is materialised lazily via :meth:`jax_fn` (and therefore not
+    pickled into the on-disk cache — it is re-emitted on load).
+
+    ``timings`` always describe the compile that *built* the artifact; a
+    cache-served design keeps its original build cost.
+    """
+
+    name: str
+    config: CompilerConfig
+    graph_raw: Graph
+    graph_opt: Graph
+    schedule: Schedule
+    pass_reports: list[PassReport]
+    design_hash: str
+    timings: dict[str, float]
+    _jax_fn: Optional[Callable] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    # -- derived metrics ----------------------------------------------------
+
+    @property
+    def makespan(self) -> int:
+        return self.schedule.makespan
+
+    @property
+    def latency_us(self) -> float:
+        return self.schedule.latency_us
+
+    def pass_time_by_name(self) -> dict[str, float]:
+        """Total wall time per pass name across all fixpoint rounds."""
+        out: dict[str, float] = {}
+        for rep in self.pass_reports:
+            out[rep.name] = out.get(rep.name, 0.0) + rep.wall_s
+        return out
+
+    # -- execution backends -------------------------------------------------
+
+    def jax_fn(self) -> Callable:
+        """The emitted SIMD design (jittable), materialised on first use."""
+        if self._jax_fn is None:
+            self._jax_fn = emit.to_jax_fn(self.graph_opt)
+        return self._jax_fn
+
+    def evaluate(self, feeds: dict, *, fmt: Optional[FloatFormat] = None,
+                 raw: bool = False) -> dict:
+        """Functional simulation (optionally quantised / on the raw graph)."""
+        g = self.graph_raw if raw else self.graph_opt
+        return emit.evaluate(g, feeds, fmt=fmt)
+
+    def partition(self, n_stages: int) -> tuple[list[list[int]], int]:
+        """Pipeline the design: (stages as nest-id lists, initiation interval)."""
+        return partition_stages(self.graph_opt, self.schedule, n_stages)
+
+    def summary(self) -> str:
+        res = self.schedule.resources()
+        return (f"{self.name}: ops {len(self.graph_raw.ops)} -> "
+                f"{len(self.graph_opt.ops)}, intervals={self.makespan} "
+                f"({self.latency_us:.2f} us), resources={res}, "
+                f"hash={self.design_hash[:12]}")
+
+    # -- pickling (the lazy jax fn is a closure: drop it) --------------------
+
+    def __getstate__(self):
+        state = self.__dict__.copy()
+        state["_jax_fn"] = None
+        return state
+
+
+# ---------------------------------------------------------------------------
+# Design cache
+# ---------------------------------------------------------------------------
+
+
+class DesignCache:
+    """In-memory + optional on-disk cache of ``CompiledDesign`` artifacts.
+
+    Keyed by the design hash (graph fingerprint + config key).  The disk
+    layer stores one pickle per design under ``cache_dir``; loads re-emit
+    the jax fn lazily.
+    """
+
+    def __init__(self, cache_dir: Optional[Union[str, Path]] = None, *,
+                 max_memory_entries: Optional[int] = None):
+        self.memory: dict[str, CompiledDesign] = {}
+        self.max_memory_entries = max_memory_entries
+        self.cache_dir = Path(cache_dir) if cache_dir else None
+        if self.cache_dir:
+            # entries are pickles: refuse a directory another user controls
+            self.cache_dir.mkdir(parents=True, exist_ok=True, mode=0o700)
+            if hasattr(os, "getuid"):
+                st = self.cache_dir.stat()
+                if st.st_uid != os.getuid():
+                    raise RuntimeError(
+                        f"design cache dir {self.cache_dir} is owned by "
+                        f"uid {st.st_uid}, not the current user — refusing "
+                        f"to load pickles from it")
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, key: str) -> Optional[Path]:
+        return self.cache_dir / f"{key}.pkl" if self.cache_dir else None
+
+    def get(self, key: str) -> Optional[CompiledDesign]:
+        design = self.memory.get(key)
+        if design is not None:
+            self.hits += 1
+            return design
+        path = self._path(key)
+        if path is not None and path.exists():
+            try:
+                with open(path, "rb") as f:
+                    design = pickle.load(f)
+            except Exception:
+                design = None       # corrupt entry: treat as miss
+            if design is not None:
+                self.memory[key] = design
+                self.hits += 1
+                return design
+        self.misses += 1
+        return None
+
+    def put(self, key: str, design: CompiledDesign) -> None:
+        self.memory[key] = design
+        if self.max_memory_entries is not None:
+            while len(self.memory) > self.max_memory_entries:
+                self.memory.pop(next(iter(self.memory)))  # evict oldest
+        path = self._path(key)
+        if path is not None:
+            tmp = path.with_suffix(".tmp")
+            with open(tmp, "wb") as f:
+                pickle.dump(design, f)
+            tmp.replace(path)
+
+    def clear(self) -> None:
+        self.memory.clear()
+        if self.cache_dir:
+            for p in self.cache_dir.glob("*.pkl"):
+                p.unlink()
+
+
+# ---------------------------------------------------------------------------
+# The driver
+# ---------------------------------------------------------------------------
+
+BuildFn = Callable[[Context], None]
+
+
+class CompilerDriver:
+    """Single entrypoint for the full lowering flow (paper Fig. 1).
+
+    ``compile`` accepts either a build callable (``Context -> None``, the
+    trace step runs here) or an already-traced ``Graph``, and returns a
+    ``CompiledDesign``.  Repeated compiles of the same program + config are
+    served from the cache (tracing still runs for build callables — the
+    graph fingerprint requires the traced DFG — but passes, scheduling and
+    emission are skipped).
+    """
+
+    def __init__(self, config: Optional[CompilerConfig] = None, *,
+                 cache: Optional[DesignCache] = None,
+                 cache_dir: Optional[Union[str, Path]] = None):
+        self.config = config or CompilerConfig()
+        self.cache = cache or DesignCache(cache_dir)
+
+    # -- stages -------------------------------------------------------------
+
+    def trace(self, build: BuildFn, *,
+              forward: Optional[bool] = None) -> Graph:
+        """Symbolic interpretation: run the loop nests, recover the DFG."""
+        ctx = Context(forward=self.config.forward if forward is None
+                      else forward)
+        build(ctx)
+        return ctx.finalize()
+
+    def compile(self, program: Union[BuildFn, Graph], *,
+                name: str = "design",
+                config: Optional[CompilerConfig] = None) -> CompiledDesign:
+        cfg = config or self.config
+        timings: dict[str, float] = {}
+
+        t0 = time.perf_counter()
+        if isinstance(program, Graph):
+            g_raw = program
+        else:
+            g_raw = self.trace(program, forward=cfg.forward)
+        timings["trace_s"] = time.perf_counter() - t0
+
+        key = hashlib.sha256(
+            (f"v{CACHE_FORMAT_VERSION}|" + graph_fingerprint(g_raw) + "|"
+             + cfg.key()).encode()).hexdigest()
+        cached = self.cache.get(key)
+        if cached is not None:
+            if cached.name != name:
+                # relabel for this caller; graphs/schedule/fn stay shared
+                return dataclasses.replace(cached, name=name)
+            return cached
+
+        t0 = time.perf_counter()
+        g_opt, reports = cfg.pass_manager().run(g_raw)
+        timings["passes_s"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        sched = list_schedule(
+            g_opt, binding=cfg.binding, unroll_factor=cfg.unroll_factor,
+            ports_per_array=cfg.ports_per_array,
+            pipelined_units=cfg.pipelined_units,
+            alap_compact=cfg.alap_compact)
+        timings["schedule_s"] = time.perf_counter() - t0
+        timings["total_s"] = sum(timings.values())
+
+        design = CompiledDesign(
+            name=name, config=cfg, graph_raw=g_raw, graph_opt=g_opt,
+            schedule=sched, pass_reports=reports, design_hash=key,
+            timings=timings)
+        self.cache.put(key, design)
+        return design
+
+
+#: Process-wide default driver — the convenience entrypoint for examples
+#: and serving.  Benchmarks that measure compile time should instantiate
+#: their own driver (or clear this one's cache).
+_default_driver: Optional[CompilerDriver] = None
+
+
+def default_driver() -> CompilerDriver:
+    global _default_driver
+    if _default_driver is None:
+        _default_driver = CompilerDriver()
+    return _default_driver
+
+
+def compile(program: Union[BuildFn, Graph], *, name: str = "design",
+            config: Optional[CompilerConfig] = None) -> CompiledDesign:
+    """Module-level convenience: ``pipeline.compile(build_fn)``."""
+    return default_driver().compile(program, name=name, config=config)

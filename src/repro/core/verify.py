@@ -12,16 +12,16 @@ of CI, exactly as the paper describes.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core import emit, passes
+from repro.core import emit
 from repro.core.interp import Context
 from repro.core.ir import Graph
+from repro.core.pipeline import (CompiledDesign, CompilerConfig,
+                                 CompilerDriver)
 from repro.core.precision import FloatFormat
-from repro.core.schedule import Schedule, list_schedule
 
 
 def input_shapes(g: Graph) -> dict[str, tuple[int, ...]]:
@@ -75,8 +75,10 @@ def _max_err(a: dict[str, np.ndarray], b: dict[str, np.ndarray]) -> float:
 
 def run_testbench(
     name: str,
-    build: Callable[[Context], None],
+    build: Optional[Callable[[Context], None]] = None,
     *,
+    design: Optional[CompiledDesign] = None,
+    driver: Optional[CompilerDriver] = None,
     ref_fn: Optional[Callable[[dict[str, np.ndarray]], dict[str, np.ndarray]]] = None,
     fmt: Optional[FloatFormat] = None,
     batch: int = 4,
@@ -88,18 +90,25 @@ def run_testbench(
     tree_threshold: int = 4,
     feed_transforms: Optional[dict] = None,
 ) -> TestbenchReport:
-    """Build, optimise, schedule and behaviourally verify one design.
+    """Behaviourally verify one design.
+
+    Either pass ``build`` (a ``Context -> None`` builder: the testbench
+    compiles it through ``CompilerDriver``) or an already-compiled
+    ``design`` — the testbench then consumes the ``CompiledDesign``
+    artifact directly instead of re-running the flow.
 
     ``feed_transforms``: per-input-name callables applied to the random
     feeds (e.g. ``abs`` for a variance input).
     """
-    t0 = time.perf_counter()
-    ctx = Context(forward=True)
-    build(ctx)
-    g_raw = ctx.finalize()
-    g_opt = passes.optimize(g_raw, tree_threshold=tree_threshold)
-    sched: Schedule = list_schedule(g_opt)
-    build_s = time.perf_counter() - t0
+    report_name = name
+    if design is None:
+        if build is None:
+            raise ValueError("run_testbench needs either build= or design=")
+        drv = driver or CompilerDriver(
+            CompilerConfig(tree_threshold=tree_threshold))
+        design = drv.compile(build, name=name)
+    g_raw, g_opt = design.graph_raw, design.graph_opt
+    build_s = design.timings.get("total_s", 0.0)
 
     feeds = random_feeds(g_raw, batch=batch, seed=seed, scale=scale)
     for name, fn in (feed_transforms or {}).items():
@@ -120,7 +129,7 @@ def run_testbench(
 
     err_jax = 0.0
     if check_jax:
-        fn = emit.to_jax_fn(g_opt)
+        fn = design.jax_fn()
         out_jax = {k: np.asarray(v) for k, v in fn(feeds).items()}
         err_jax = _max_err(out_raw, out_jax)
 
@@ -130,7 +139,7 @@ def run_testbench(
     passed = (err_opt <= atol and err_jax <= atol
               and (ref_fn is None or err_ref <= ref_atol))
     return TestbenchReport(
-        name=name, n_ops_raw=len(g_raw.ops), n_ops_opt=len(g_opt.ops),
-        makespan=sched.makespan, max_abs_err_opt=err_opt,
+        name=report_name, n_ops_raw=len(g_raw.ops), n_ops_opt=len(g_opt.ops),
+        makespan=design.makespan, max_abs_err_opt=err_opt,
         max_abs_err_ref=err_ref, max_abs_err_quant=err_quant,
         max_abs_err_jax=err_jax, build_seconds=build_s, passed=passed)

@@ -56,8 +56,8 @@ def test_prune_spec_divisibility():
     import jax
     if jax.device_count() < 1:
         pytest.skip("needs a device")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import single_device_mesh
+    mesh = single_device_mesh()
     # sizes divide trivially on a 1x1 mesh
     assert prune_spec((4, 4), P("data", "model"), mesh) == P("data", "model")
 
@@ -124,6 +124,9 @@ print("COMPILED", compiled.memory_analysis().temp_size_in_bytes)
 def test_small_mesh_dryrun_subprocess():
     """Lower+compile a tiny heterogeneous (local/global, post-norm) arch on
     a 2x2x2 placeholder mesh in a fresh process (8 fake devices)."""
+    import jax
+    if not hasattr(jax, "set_mesh"):
+        pytest.skip("dryrun path needs jax.set_mesh (jax >= 0.6)")
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))

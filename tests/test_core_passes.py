@@ -5,6 +5,8 @@ randomly generated scalar programs.
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Context, emit, frontend, passes, verify

@@ -10,6 +10,9 @@ More units can never hurt: makespan is monotone non-increasing in
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Context, frontend, passes
