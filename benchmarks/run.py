@@ -3,7 +3,10 @@
     PYTHONPATH=src python -m benchmarks.run [--fast]
 
 Emits ``name,us_per_call,derived`` CSV lines per benchmark plus each
-benchmark's own detailed CSV.  Mapping to the paper:
+benchmark's own detailed CSV, and aggregates every benchmark's structured
+result — including the per-pass ``PassReport`` timings the compiler
+records — into a machine-readable ``BENCH_<date>.json`` at the repo root,
+so the perf trajectory across PRs is diffable.  Mapping to the paper:
     layers        — Fig. 4   (latency/resources vs unroll, 5 layer types)
     tool_runtime  — Fig. 2/5 (compiler runtime vs trip count)
     braggnn       — §4.2/Fig. 6 (end-to-end case study)
@@ -14,17 +17,63 @@ benchmark's own detailed CSV.  Mapping to the paper:
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import pathlib
 import sys
 import time
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
-def _timed(name, fn, *args, **kw):
+
+def _timed(name, results, fn, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)
     dt = (time.perf_counter() - t0) * 1e6
     print(f"{name},{dt:.0f},ok")
     sys.stdout.flush()
+    results[name] = {"wall_us": round(dt), "result": out}
     return out
+
+
+def _jsonable(obj):
+    """Best-effort conversion of benchmark outputs to JSON values."""
+    import numpy as np
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return _jsonable(dataclasses.asdict(obj))
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.floating, np.integer)):
+        return obj.item()
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)
+
+
+def write_report(results: dict, args, out_path=None) -> pathlib.Path:
+    """Aggregate all results into ``BENCH_<date>.json`` at the repo root."""
+    date = time.strftime("%Y-%m-%d")
+    path = pathlib.Path(out_path) if out_path else \
+        REPO_ROOT / f"BENCH_{date}.json"
+    # surface per-pass PassReport wall times as a first-class key so the
+    # perf trajectory of the compiler itself is machine-readable
+    pass_times = {}
+    bragg = results.get("bench_braggnn", {}).get("result") or {}
+    if isinstance(bragg, dict) and "pass_s" in bragg:
+        pass_times["braggnn"] = bragg["pass_s"]
+    report = {
+        "date": date,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "args": {"fast": args.fast, "only": args.only},
+        "pass_times_s": pass_times,
+        "benchmarks": _jsonable(results),
+    }
+    path.write_text(json.dumps(report, indent=1, sort_keys=True))
+    return path
 
 
 def main() -> None:
@@ -32,6 +81,9 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="reduced sizes (CI-friendly)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default=None,
+                    help="aggregate JSON path (default: "
+                         "BENCH_<date>.json at the repo root)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (bench_braggnn, bench_layers, bench_precision,
@@ -40,26 +92,30 @@ def main() -> None:
     todo = args.only.split(",") if args.only else [
         "layers", "tool_runtime", "braggnn", "precision", "roofline"]
 
+    results: dict = {}
     print("name,us_per_call,derived")
     if "layers" in todo:
         print("## Fig4: layer suite ##")
-        _timed("bench_layers", bench_layers.main)
+        _timed("bench_layers", results, bench_layers.main)
     if "tool_runtime" in todo:
         print("## Fig2/5: tool runtime ##")
         if args.fast:
             bench_tool_runtime.IMAGE_SIZES = (8, 16, 32)
-        _timed("bench_tool_runtime", bench_tool_runtime.main)
+        _timed("bench_tool_runtime", results, bench_tool_runtime.main)
     if "braggnn" in todo:
         print("## §4.2: BraggNN case study ##")
         img = 9 if args.fast else 11
-        _timed("bench_braggnn", bench_braggnn.main, img=img)
+        _timed("bench_braggnn", results, bench_braggnn.main, img=img)
     if "precision" in todo:
         print("## Fig7: precision study ##")
         steps = 60 if args.fast else 300
-        _timed("bench_precision", bench_precision.main, steps=steps)
+        _timed("bench_precision", results, bench_precision.main, steps=steps)
     if "roofline" in todo:
         print("## §Roofline: 40-cell table ##")
-        _timed("bench_roofline", bench_roofline.main)
+        _timed("bench_roofline", results, bench_roofline.main)
+
+    path = write_report(results, args, args.out)
+    print(f"# aggregate report: {path}")
 
 
 if __name__ == "__main__":

@@ -1,36 +1,76 @@
 """BraggNN low-latency inference — the paper's deployment scenario (§4.2).
 
     PYTHONPATH=src python examples/braggnn_serve.py
+    PYTHONPATH=src python examples/braggnn_serve.py --tuned
+    PYTHONPATH=src python examples/braggnn_serve.py --pipeline cse,dce
 
 Trains BraggNN briefly on synthetic Bragg peaks, compiles the full OpenHLS
-design (schedule + 3-stage pipeline report next to the paper's numbers),
-then serves batched peak-localisation requests through the fused (5,4)
-reduced-precision path and reports throughput.
+design (schedule + pipeline report next to the paper's numbers), then
+serves batched peak-localisation requests through the fused reduced-
+precision path — (5,4) by default, or whatever format the tuned candidate
+carries — and reports throughput.
+
+``--tuned`` auto-loads the best known compile configuration from the
+persistent ``TuningDB`` (populate it with
+``python -m repro.tune --config braggnn``); ``--pipeline`` overrides the
+pass pipeline by hand.  Designs are cached under the shared versioned
+cache root, so warm runs serve the schedule from disk.
 """
 
-import os
-import tempfile
+import argparse
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import CompilerDriver, frontend
-from repro.core.schedule import CLOCK_NS
+from repro.core import CompilerConfig, CompilerDriver, cache_root, frontend
+from repro.core.pipeline import parse_pipeline_spec
 from repro.models import braggnn
 from repro.nn import module
 from repro.optim import adamw
 
-#: On-disk design cache: the second run of this example (and any other
-#: consumer compiling BraggNN(s=1)) serves the schedule from disk.
-#: Per-user path — cache entries are pickles, never share them.
-_UID = os.getuid() if hasattr(os, "getuid") else "u"
-CACHE_DIR = Path(tempfile.gettempdir()) / f"repro_design_cache_{_UID}"
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tuned", action="store_true",
+                    help="load the best compile config from the TuningDB")
+    ap.add_argument("--pipeline", default=None, metavar="P1,P2,...",
+                    help="override the pass pipeline (comma-separated)")
+    ap.add_argument("--db", default=None,
+                    help="TuningDB path (default: shared cache root)")
+    return ap.parse_args(argv)
 
 
-def main() -> None:
+def resolve_config(args, graph):
+    """(compile config, serve fmt key, source tag): tuned > --pipeline >
+    default.  ``graph`` is the already-traced BraggNN DFG (tracing is the
+    dominant cost — never repeat it)."""
+    if args.tuned:
+        from repro.tune import TuningDB, best_config_for, braggnn_space
+        space = braggnn_space()
+        hit = best_config_for(graph, space, db=TuningDB(args.db))
+        if hit is None:
+            print("--tuned: no TuningDB entry for this design/space yet — "
+                  "run `python -m repro.tune --config braggnn` first; "
+                  "serving the default config")
+            return CompilerConfig(n_stages=3), "5_4", "default"
+        config, candidate = hit
+        fmt = candidate.get("precision", "5_4")
+        fmt = None if fmt == "fp32" else fmt
+        return config, fmt, f"tuned ({candidate.label()})"
+    if args.pipeline is not None:
+        try:
+            names = parse_pipeline_spec(args.pipeline)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        return CompilerConfig(pipeline=names, n_stages=3), "5_4", \
+            f"--pipeline {','.join(names) or '(none)'}"
+    return CompilerConfig(n_stages=3), "5_4", "default"
+
+
+def main(argv=None) -> None:
+    args = parse_args(argv)
+
     # --- train briefly on synthetic peaks --------------------------------
     params = module.init_tree(braggnn.specs(1), jax.random.key(0))
     opt_cfg = adamw.AdamWConfig(peak_lr=2e-3, warmup_steps=10,
@@ -52,21 +92,25 @@ def main() -> None:
     print(f"trained BraggNN: loss {float(l):.4f}")
 
     # --- the OpenHLS schedule (paper's deployment artifact), served from
-    # --- the design cache on warm runs -------------------------------------
-    driver = CompilerDriver(cache_dir=CACHE_DIR)
+    # --- the shared design cache on warm runs ------------------------------
+    driver = CompilerDriver(cache_dir=cache_root("designs"))
     t0 = time.perf_counter()
-    design = driver.compile(lambda ctx: frontend.braggnn(ctx, s=1),
-                            name="braggnn_s1")
+    graph = driver.trace(lambda ctx: frontend.braggnn(ctx, s=1))
+    config, serve_fmt, source = resolve_config(args, graph)
+    design = driver.compile(graph, name="braggnn_s1", config=config)
     compile_s = time.perf_counter() - t0
-    _, ii = design.partition(3)
-    source = "cache" if driver.cache.hits else "cold compile"
-    print(f"OpenHLS schedule ({source}, {compile_s:.1f}s): "
-          f"{design.makespan} intervals total, 3-stage "
-          f"II={ii} -> {ii * CLOCK_NS * 1e-3:.2f} us/sample "
-          f"(paper: 1238 total, II=480 -> 4.8 us/sample)")
+    # report the latency of the configuration actually deployed: stage II
+    # when the config pipelines, plain makespan when it does not
+    stage = (f"{design.config.n_stages}-stage II={design.stage_ii}"
+             if design.stage_ii is not None else "unpipelined")
+    served_from = "cache" if driver.cache.hits else "cold compile"
+    print(f"OpenHLS schedule [{source}] ({served_from}, {compile_s:.1f}s): "
+          f"{design.makespan} intervals total, {stage} -> "
+          f"{design.sample_latency_us:.2f} us/sample "
+          f"(paper: 1238 total, 3-stage II=480 -> 4.8 us/sample)")
 
-    # --- serve batches at (5,4) precision ----------------------------------
-    infer = jax.jit(lambda p, xx: braggnn.forward(p, xx, fmt="5_4"))
+    # --- serve batches at the deployed precision ---------------------------
+    infer = jax.jit(lambda p, xx: braggnn.forward(p, xx, fmt=serve_fmt))
     x, y = braggnn.synthetic_peaks(jax.random.key(7), 1024)
     jax.block_until_ready(infer(params, x))
     t0 = time.perf_counter()
@@ -76,9 +120,11 @@ def main() -> None:
     jax.block_until_ready(pred)
     dt = time.perf_counter() - t0
     err_px = float(jnp.mean(jnp.abs(pred / 10.0 - y))) * 11
+    fmt_label = "fp32" if serve_fmt is None else \
+        f"({serve_fmt.replace('_', ',')})"
     print(f"served {reps * 1024} samples: "
           f"{dt / (reps * 1024) * 1e6:.2f} us/sample on CPU, "
-          f"mean localisation error {err_px:.3f} px at (5,4)")
+          f"mean localisation error {err_px:.3f} px at {fmt_label}")
 
 
 if __name__ == "__main__":

@@ -1,17 +1,23 @@
 """Quickstart: the OpenHLS pipeline end to end on one convolution.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --pipeline cse,dce
 
 One ``CompilerDriver.compile()`` call runs the whole Fig. 1 flow: the
 conv2d loop nest is symbolically interpreted into an SSA DFG (store-load
 forwarding included), optimised, scheduled, and bundled as a
 ``CompiledDesign``.  We then behaviourally verify it, quantise to FloPoCo
-(5,4), and run the emitted SIMD design.
+(5,4), and run the emitted SIMD design.  ``--pipeline`` selects which
+registered passes run (comma-separated, in order) instead of the default
+§3.2 pipeline.
 """
+
+import argparse
 
 import numpy as np
 
-from repro.core import CompilerDriver, FP_5_4, frontend
+from repro.core import CompilerConfig, CompilerDriver, FP_5_4, frontend
+from repro.core.pipeline import DEFAULT_PIPELINE, parse_pipeline_spec
 
 
 def build(ctx) -> None:
@@ -23,10 +29,22 @@ def build(ctx) -> None:
     frontend.conv2d(ctx, x, w, b, out)
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--pipeline", default=None, metavar="P1,P2,...",
+                    help="comma-separated pass pipeline "
+                         f"(default: {','.join(DEFAULT_PIPELINE)})")
+    args = ap.parse_args(argv)
+    try:
+        config = CompilerConfig() if args.pipeline is None else \
+            CompilerConfig(pipeline=parse_pipeline_spec(args.pipeline))
+    except ValueError as e:
+        raise SystemExit(str(e))
+
     # 2. compile: trace -> passes -> schedule, one entrypoint
-    driver = CompilerDriver()
+    driver = CompilerDriver(config)
     design = driver.compile(build, name="conv2d_quickstart")
+    print(f"pass pipeline: {', '.join(design.config.pipeline) or '(none)'}")
     print(f"raw DFG:      {len(design.graph_raw.ops):6d} ops "
           f"(no loads/stores — forwarding is built in)")
     print(f"optimised:    {len(design.graph_opt.ops):6d} ops  "

@@ -38,20 +38,16 @@ from typing import Callable, Optional, Sequence, Union
 import numpy as np
 
 from repro.core import emit, passes
+from repro.core.cachedir import CACHE_FORMAT_VERSION
 from repro.core.interp import Context
 from repro.core.ir import Graph
 from repro.core.precision import FloatFormat
-from repro.core.schedule import Schedule, list_schedule, partition_stages
+from repro.core.schedule import (Schedule, ScheduleParams, list_schedule,
+                                 partition_stages)
 
 # ---------------------------------------------------------------------------
 # Pass registry
 # ---------------------------------------------------------------------------
-
-#: Folded into every design hash: bump when Graph/Schedule/CompiledDesign
-#: layout or pass semantics change, so stale on-disk pickles from older
-#: code versions become cache misses instead of loading into incompatible
-#: objects.
-CACHE_FORMAT_VERSION = 1
 
 #: name -> Graph-rewriting callable.  Populated by ``register_pass``.
 PASS_REGISTRY: dict[str, Callable[..., Graph]] = {}
@@ -81,6 +77,20 @@ register_pass("fmac_coalesce")(passes.fmac_coalesce)
 register_pass("dce")(passes.dce)
 
 DEFAULT_PIPELINE: tuple[str, ...] = tuple(passes.DEFAULT_PIPELINE)
+
+
+def parse_pipeline_spec(spec: str) -> tuple[str, ...]:
+    """Parse a ``"cse,dce"``-style CLI pipeline spec against the registry.
+
+    Raises ``ValueError`` naming the first unknown pass; empty segments are
+    dropped, so ``""`` is the empty pipeline.
+    """
+    names = tuple(p for p in (s.strip() for s in spec.split(",")) if p)
+    unknown = [p for p in names if p not in PASS_REGISTRY]
+    if unknown:
+        raise ValueError(f"unknown pass {unknown[0]!r}; registered: "
+                         f"{sorted(PASS_REGISTRY)}")
+    return names
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +239,7 @@ class CompilerConfig:
     ports_per_array: int = 2
     pipelined_units: bool = False
     alap_compact: bool = True
+    n_stages: int = 1                    # pipeline-partition factor (§4.2)
     topo_check: bool = False
     spot_verify: bool = False
 
@@ -237,6 +248,23 @@ class CompilerConfig:
             self.pipeline, max_rounds=self.max_rounds,
             pass_options={"reduction_tree": {"threshold": self.tree_threshold}},
             topo_check=self.topo_check, spot_verify=self.spot_verify)
+
+    def schedule_params(self) -> ScheduleParams:
+        """The schedule-stage slice of the config, as a first-class bundle."""
+        return ScheduleParams(
+            binding=self.binding, unroll_factor=self.unroll_factor,
+            ports_per_array=self.ports_per_array,
+            pipelined_units=self.pipelined_units,
+            alap_compact=self.alap_compact, n_stages=self.n_stages)
+
+    def pass_key(self) -> str:
+        """Canonical string over the fields that determine the *optimised
+        graph* (not the schedule).  Two configs sharing a pass key can share
+        one pass-stage run — the lever design-space search leans on: mutating
+        a schedule knob re-schedules in ~0.1x the cost of re-optimising.
+        """
+        return repr((self.pipeline, self.tree_threshold, self.max_rounds,
+                     self.forward, self.topo_check, self.spot_verify))
 
     def key(self) -> str:
         """Canonical string folded into the design hash."""
@@ -292,6 +320,11 @@ class CompiledDesign:
     pass_reports: list[PassReport]
     design_hash: str
     timings: dict[str, float]
+    #: Stage partition, materialised at compile time when
+    #: ``config.n_stages > 1`` (paper §4.2's pipelined deployment); both
+    #: stay ``None`` for unpipelined designs.
+    stages: Optional[list[list[int]]] = None
+    stage_ii: Optional[int] = None
     _jax_fn: Optional[Callable] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -304,6 +337,15 @@ class CompiledDesign:
     @property
     def latency_us(self) -> float:
         return self.schedule.latency_us
+
+    @property
+    def sample_latency_us(self) -> float:
+        """Per-sample latency of the deployed design: the initiation
+        interval when the design is stage-pipelined, else the makespan."""
+        intervals = self.stage_ii if self.stage_ii is not None \
+            else self.schedule.makespan
+        from repro.core.schedule import CLOCK_NS
+        return intervals * CLOCK_NS * 1e-3
 
     def pass_time_by_name(self) -> dict[str, float]:
         """Total wall time per pass name across all fixpoint rounds."""
@@ -440,6 +482,11 @@ class CompilerDriver:
                  cache_dir: Optional[Union[str, Path]] = None):
         self.config = config or CompilerConfig()
         self.cache = cache or DesignCache(cache_dir)
+        # pass-stage memo: (graph fingerprint, cfg.pass_key()) -> optimised
+        # graph + reports.  Configs differing only in schedule knobs reuse
+        # the (expensive) pass stage — the design-space explorer's hot path.
+        self._opt_memo: dict[tuple[str, str],
+                             tuple[Graph, list[PassReport]]] = {}
 
     # -- stages -------------------------------------------------------------
 
@@ -475,22 +522,27 @@ class CompilerDriver:
             return cached
 
         t0 = time.perf_counter()
-        g_opt, reports = cfg.pass_manager().run(g_raw)
+        memo_key = (graph_fingerprint(g_raw), cfg.pass_key())
+        memoised = self._opt_memo.get(memo_key)
+        if memoised is not None:
+            g_opt, reports = memoised
+        else:
+            g_opt, reports = cfg.pass_manager().run(g_raw)
+            self._opt_memo[memo_key] = (g_opt, reports)
         timings["passes_s"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        sched = list_schedule(
-            g_opt, binding=cfg.binding, unroll_factor=cfg.unroll_factor,
-            ports_per_array=cfg.ports_per_array,
-            pipelined_units=cfg.pipelined_units,
-            alap_compact=cfg.alap_compact)
+        sched = list_schedule(g_opt, params=cfg.schedule_params())
+        stages = stage_ii = None
+        if cfg.n_stages > 1:
+            stages, stage_ii = partition_stages(g_opt, sched, cfg.n_stages)
         timings["schedule_s"] = time.perf_counter() - t0
         timings["total_s"] = sum(timings.values())
 
         design = CompiledDesign(
             name=name, config=cfg, graph_raw=g_raw, graph_opt=g_opt,
-            schedule=sched, pass_reports=reports, design_hash=key,
-            timings=timings)
+            schedule=sched, pass_reports=list(reports), design_hash=key,
+            timings=timings, stages=stages, stage_ii=stage_ii)
         self.cache.put(key, design)
         return design
 

@@ -40,6 +40,27 @@ from repro.core.ir import DEFAULT_DELAYS, RESOURCE_CLASS, Graph
 CLOCK_NS = 10.0  # paper §4: all designs synthesised for a 10 ns target clock
 
 
+@dataclasses.dataclass(frozen=True)
+class ScheduleParams:
+    """The schedule-shaping knobs, bundled as one first-class value.
+
+    These are exactly the parameters a design-space explorer mutates
+    (``repro.tune``): ``unroll_factor`` caps per-class unit capacity,
+    ``n_stages`` is the pipeline-partition (tile) factor consumed by
+    ``partition_stages``, and the remaining fields select the binding
+    discipline and compaction.  ``list_schedule(g, params=...)`` accepts
+    the bundle directly; ``n_stages`` is carried for the stage-partition
+    step that follows scheduling.
+    """
+
+    binding: str = "pool"
+    unroll_factor: Optional[int] = None
+    ports_per_array: int = 2
+    pipelined_units: bool = False
+    alap_compact: bool = True
+    n_stages: int = 1
+
+
 @dataclasses.dataclass
 class Schedule:
     """A fully scheduled design."""
@@ -101,6 +122,7 @@ class _UnitPool:
 def list_schedule(
     g: Graph,
     *,
+    params: Optional[ScheduleParams] = None,
     binding: str = "pool",
     unroll_factor: Optional[int] = None,
     ports_per_array: int = 2,
@@ -110,6 +132,10 @@ def list_schedule(
 ) -> Schedule:
     """Schedule ``g``.
 
+    params:
+        a ``ScheduleParams`` bundle; when given it overrides the individual
+        keyword knobs (``n_stages`` is ignored here — it parameterises the
+        ``partition_stages`` step that follows).
     binding:
         "pool" — OpenHLS mode (per-class capacity K = max_i K_i, or
         ``unroll_factor`` when given).
@@ -125,6 +151,12 @@ def list_schedule(
         matching the paper's precedence-constraint transformation
         (start_a + delay_a <= start_b, footnote 2).
     """
+    if params is not None:
+        binding = params.binding
+        unroll_factor = params.unroll_factor
+        ports_per_array = params.ports_per_array
+        pipelined_units = params.pipelined_units
+        alap_compact = params.alap_compact
     assert binding in ("pool", "rank"), binding
     delays = delays or DEFAULT_DELAYS
     n = len(g.ops)

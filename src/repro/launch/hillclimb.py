@@ -7,6 +7,10 @@ cycle leaves a JSON artifact next to its baseline.
 
     PYTHONPATH=src python -m repro.launch.hillclimb --cell stablelm_train
     PYTHONPATH=src python -m repro.launch.hillclimb --cell all
+
+The sweep loop itself (ordered tagged variants, skip-if-artifact-exists)
+lives in ``repro.tune.strategies.sweep_variants``; the automated version of
+the manual rounds below is ``repro.tune``'s ``HillClimb`` strategy.
 """
 
 import argparse
@@ -103,6 +107,7 @@ def summarize(out_dir: pathlib.Path, arch: str, shape: str) -> None:
 
 def main() -> None:
     from repro.launch.dryrun import run_cell
+    from repro.tune.strategies import sweep_variants
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", default="all", choices=list(CELLS) + ["all"])
     ap.add_argument("--out", default="experiments/dryrun")
@@ -113,15 +118,19 @@ def main() -> None:
     for name in names:
         arch, shape, variants = CELLS[name]()
         if not args.summarize_only:
-            for tag, cfg in variants:
+            def already_ok(tag, cfg):
                 path = out_dir / f"{arch}__{shape}__single__{tag}.json"
-                if path.exists() and \
-                        json.loads(path.read_text()).get("status") == "ok":
-                    continue
+                return path.exists() and \
+                    json.loads(path.read_text()).get("status") == "ok"
+
+            def run_one(tag, cfg):
                 rec = run_cell(arch, shape, "single", out_dir, cfg=cfg,
                                tag=tag)
-                status = rec.get("status")
-                print(f"[{status}] {arch} x {shape} [{tag}]", flush=True)
+                print(f"[{rec.get('status')}] {arch} x {shape} [{tag}]",
+                      flush=True)
+                return rec
+
+            sweep_variants(variants, run_one, skip=already_ok)
         summarize(out_dir, arch, shape)
 
 

@@ -1,0 +1,61 @@
+"""``repro.tune`` — design-space exploration over the OpenHLS flow.
+
+The paper reaches its 4.8 us/sample BraggNN latency by *searching*:
+bisection over unroll factors and a precision descent until the target is
+met (§4.2); hls4ml ships the same idea as reuse-factor/strategy knobs.
+This subsystem makes that search a first-class, persistent artifact on top
+of the ``CompilerDriver``:
+
+  * :mod:`repro.tune.space`      — declarative ``SearchSpace`` (pass
+    pipelines, ``ScheduleParams`` knobs, FloPoCo precision ladder);
+  * :mod:`repro.tune.evaluator`  — cached compile + interpreter-reference
+    numerics gate + latency objective (wall-clocked, or roofline cost
+    model in dry mode);
+  * :mod:`repro.tune.strategies` — ``Bisection`` (paper-style),
+    ``HillClimb`` (absorbs ``launch.hillclimb``'s manual rounds),
+    ``RandomSearch``;
+  * :mod:`repro.tune.db`         — ``TuningDB``: best configs persisted
+    under the shared versioned cache root, keyed by
+    (design content hash, space hash);
+  * :mod:`repro.tune.tuner`      — the budgeted ask/tell loop;
+  * ``python -m repro.tune``     — the CLI (:mod:`repro.tune.cli`).
+
+Serving picks up wins via :func:`best_config_for` — see
+``examples/braggnn_serve.py --tuned``.
+"""
+
+from typing import Optional
+
+from repro.tune.db import TuningDB, lookup_best
+from repro.tune.evaluator import Evaluator, Trial, roofline_estimate_us
+from repro.tune.space import (Candidate, Knob, SearchSpace, braggnn_space,
+                              conv2d_space)
+from repro.tune.strategies import (STRATEGIES, Bisection, HillClimb,
+                                   RandomSearch, Strategy, make_strategy,
+                                   sweep_variants)
+from repro.tune.tuner import TuneResult, Tuner
+
+__all__ = [
+    "TuningDB", "lookup_best", "Evaluator", "Trial", "roofline_estimate_us",
+    "Candidate", "Knob", "SearchSpace", "braggnn_space", "conv2d_space",
+    "STRATEGIES", "Bisection", "HillClimb", "RandomSearch", "Strategy",
+    "make_strategy", "sweep_variants", "TuneResult", "Tuner",
+    "best_config_for",
+]
+
+
+def best_config_for(graph, space: SearchSpace, *,
+                    db: Optional[TuningDB] = None):
+    """The best-known ``(CompilerConfig, Candidate)`` for a traced design.
+
+    Looks the (graph fingerprint, space hash) pair up in the ``TuningDB``;
+    returns ``None`` when nothing has been tuned yet.  This is the hook
+    serving and benchmarks use to auto-load tuned configurations.
+    """
+    from repro.core.pipeline import graph_fingerprint
+    assignment = lookup_best(db or TuningDB(), graph_fingerprint(graph),
+                             space.space_hash())
+    if assignment is None:
+        return None
+    candidate = Candidate.from_json(assignment)
+    return space.to_config(candidate), candidate

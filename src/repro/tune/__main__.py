@@ -1,0 +1,6 @@
+"""Entry point for ``python -m repro.tune``."""
+
+from repro.tune.cli import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,350 @@
+"""repro.tune: spaces, strategies, evaluator gates, TuningDB persistence,
+and the CLI contract (rerun served from the DB without re-searching).
+
+Search-loop mechanics are tested against fake trials (no compiles); the
+end-to-end paths run on a small conv2d design so the suite stays fast.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import CompilerConfig, CompilerDriver, cachedir, frontend
+from repro.core.pipeline import DEFAULT_PIPELINE
+from repro.tune import (Bisection, Candidate, Evaluator, HillClimb, Knob,
+                        RandomSearch, SearchSpace, Trial, TuneResult, Tuner,
+                        TuningDB, best_config_for, conv2d_space,
+                        sweep_variants)
+from repro.tune.cli import main as cli_main
+
+
+def _conv_build(ctx):
+    x = ctx.memref("input", (1, 2, 6, 6), "input")
+    w = ctx.memref("weight", (3, 2, 3, 3), "weight")
+    b = ctx.memref("bias", (3,), "weight")
+    out = ctx.memref("out", (1, 3, 4, 4), "output")
+    frontend.conv2d(ctx, x, w, b, out)
+
+
+def _small_space():
+    return SearchSpace((
+        Knob("unroll_factor", (None, 8, 2)),
+        Knob("pipelined_units", (False, True)),
+    ), name="small")
+
+
+def _fake_trial(candidate, latency, *, valid=True, dsp=0):
+    return Trial(candidate=candidate, design_hash="x", latency_us=latency,
+                 makespan=int(latency * 100), stage_ii=None, err=0.0,
+                 valid=valid, resources={"DSP": dsp}, wire_bits=32,
+                 est_roofline_us=0.0, measured_cpu_us=None, compile_s=0.0,
+                 cached=False)
+
+
+# -- space -------------------------------------------------------------------
+
+
+def test_space_default_size_and_lowering():
+    space = conv2d_space()
+    c = space.default()
+    assert space.contains(c)
+    assert space.size() == 2 * 3 * 2 * 2
+    cfg = space.to_config(c)
+    assert cfg.pipeline == DEFAULT_PIPELINE
+    assert cfg.unroll_factor is None
+    assert space.to_format(c) is None          # baseline fp32
+    c2 = c.replace("precision", "5_4")
+    assert space.to_format(c2).man_bits == 4
+    assert space.to_config(c.replace("unroll_factor", 16)).unroll_factor == 16
+
+
+def test_space_rejects_bad_knobs():
+    with pytest.raises(ValueError, match="unknown knob"):
+        SearchSpace((Knob("warp_speed", (1, 2)),))
+    with pytest.raises(ValueError, match="unregistered pass"):
+        SearchSpace((Knob("pipeline", (("cse", "not_a_pass"),)),))
+    with pytest.raises(ValueError, match="precision"):
+        SearchSpace((Knob("precision", ("fp64",)),))
+    with pytest.raises(ValueError, match="empty domain"):
+        Knob("unroll_factor", ())
+
+
+def test_candidate_json_roundtrip_and_hash():
+    c = Candidate.of({"pipeline": ("cse", "dce"), "unroll_factor": None,
+                      "precision": "5_4"})
+    back = Candidate.from_json(json.loads(json.dumps(c.to_json())))
+    assert back == c
+    assert hash(back) == hash(c)
+    assert back.get("pipeline") == ("cse", "dce")
+
+
+def test_space_hash_sensitive_to_domain_and_base():
+    s1, s2 = _small_space(), _small_space()
+    assert s1.space_hash() == s2.space_hash()
+    s3 = SearchSpace(s1.knobs[:1], name="small")
+    assert s3.space_hash() != s1.space_hash()
+    s4 = SearchSpace(s1.knobs, name="small",
+                     base=CompilerConfig(tree_threshold=2))
+    assert s4.space_hash() != s1.space_hash()
+
+
+# -- strategies (driven with fake trials, no compiles) -----------------------
+
+
+def test_random_search_unique_in_space():
+    space = _small_space()
+    s = RandomSearch(seed=1)
+    s.reset(space, space.default())
+    seen = set()
+    while (c := s.propose()) is not None:
+        assert space.contains(c)
+        assert c not in seen
+        seen.add(c)
+    assert len(seen) == space.size() - 1       # everything but the baseline
+
+
+def test_hillclimb_descends_to_optimum():
+    space = _small_space()
+    # synthetic objective: unroll None=3us, 8=2us, 2=1us; pipelined -0.5
+    def latency(c):
+        base = {None: 3.0, 8: 2.0, 2: 1.0}[c.get("unroll_factor")]
+        return base - (0.5 if c.get("pipelined_units") else 0.0)
+
+    s = HillClimb()
+    base = space.default()
+    s.reset(space, base)
+    s.observe(base, _fake_trial(base, latency(base)))
+    evaluated = {base}
+    while (c := s.propose()) is not None:
+        if c in evaluated:
+            continue
+        evaluated.add(c)
+        s.observe(c, _fake_trial(c, latency(c)))
+    assert s.best.get("unroll_factor") == 2
+    assert s.best.get("pipelined_units") is True
+
+
+def test_bisection_finds_minimal_capacity_meeting_target():
+    space = SearchSpace((Knob("unroll_factor", (None, 64, 16, 4, 1)),),
+                        name="bs")
+    # monotone latency in capacity; target 5.0 -> smallest feasible is 16
+    lat = {1: 40.0, 4: 10.0, 16: 5.0, 64: 3.0, None: 1.0}
+
+    s = Bisection(target_us=5.0)
+    s.reset(space, space.default())
+    n = 0
+    while (c := s.propose()) is not None and n < 20:
+        n += 1
+        s.observe(c, _fake_trial(c, lat[c.get("unroll_factor")]))
+    assert s.feasible.get("unroll_factor") == 16
+    assert n <= 4                              # log2(5) bisection, not a scan
+
+
+def test_bisection_precision_descent_stops_at_invalid():
+    space = SearchSpace((
+        Knob("unroll_factor", (None, 4)),
+        Knob("precision", ("5_11", "5_4", "5_3")),
+    ), name="bsp")
+    s = Bisection(target_us=100.0)
+    s.reset(space, space.default())
+    while (c := s.propose()) is not None:
+        valid = c.get("precision") != "5_3"    # (5,3) fails the gate
+        s.observe(c, _fake_trial(c, 1.0, valid=valid))
+    assert s.feasible.get("precision") == "5_4"
+
+
+def test_sweep_variants_skips_and_orders():
+    ran = []
+    out = sweep_variants(
+        [("a", 1), ("b", 2), ("c", 3)],
+        lambda tag, p: ran.append(tag) or p * 10,
+        skip=lambda tag, p: tag == "b")
+    assert ran == ["a", "c"]
+    assert out == {"a": 10, "c": 30}
+
+
+# -- evaluator ---------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def conv_evaluator():
+    return Evaluator(_conv_build, conv2d_space(), name="conv_eval")
+
+
+def test_evaluator_validates_and_costs(conv_evaluator):
+    ev = conv_evaluator
+    t = ev.evaluate(ev.space.default())
+    assert t.valid and t.err <= 1e-3
+    assert t.latency_us > 0 and t.makespan > 0
+    assert t.est_roofline_us > 0
+    assert t.measured_cpu_us is None           # dry by default
+    assert t.resources["DSP"] > 0
+
+    # quantised candidate: gated on relative error, narrower wires
+    tq = ev.evaluate(ev.space.default().replace("precision", "5_4"))
+    assert tq.err > t.err
+    assert tq.wire_bits == 12 < t.wire_bits
+
+    # schedule-only mutation reuses the pass stage and the numerics memo
+    evals = ev.n_evals
+    tu = ev.evaluate(ev.space.default().replace("unroll_factor", 4))
+    assert ev.n_evals == evals + 1
+    assert tu.makespan > t.makespan
+    assert tu.err == t.err                     # same optimised graph
+
+
+def test_evaluator_invalid_when_tolerance_zero():
+    ev = Evaluator(_conv_build, conv2d_space(), tol_abs=0.0, tol_rel=0.0)
+    t = ev.evaluate(ev.space.default().replace("precision", "5_4"))
+    assert not t.valid
+    assert t.score() is None
+
+
+# -- tuner + db --------------------------------------------------------------
+
+
+def test_tuner_end_to_end_persists_and_serves_reruns(tmp_path):
+    db = TuningDB(tmp_path / "db.json")
+    space = conv2d_space()
+    driver = CompilerDriver()
+    ev = Evaluator(_conv_build, space, driver=driver, name="conv_tune")
+    tuner = Tuner(ev, HillClimb(), db=db, budget=5)
+    res = tuner.run()
+
+    assert not res.from_db
+    assert len(res.trials) <= 5
+    assert res.best.valid
+    assert res.best.latency_us <= res.baseline.latency_us
+    assert all(t.valid for t in [res.best])    # accepted => validated
+    assert db.path.exists()
+
+    # the DB stores the full trial log as plain JSON, keyed by run context
+    entries = db.entries_for(res.design_fingerprint, res.space_hash)
+    assert len(entries) == 1
+    entry = next(iter(entries.values()))
+    assert entry["strategy"] == "hillclimb"
+    assert entry["context"]["eval"]["mode"] == "dry"
+    assert entry["n_trials"] == len(res.trials)
+
+    # rerun with the same budget: served from the DB, zero evaluations
+    ev2 = Evaluator(_conv_build, space, driver=driver, name="conv_tune")
+    res2 = Tuner(ev2, HillClimb(), db=db, budget=5).run()
+    assert res2.from_db
+    assert ev2.n_evals == 0
+    assert res2.best.candidate == res.best.candidate
+
+    # a larger budget is NOT covered -> searches again
+    res3 = Tuner(ev2, HillClimb(), db=db, budget=7).run()
+    assert not res3.from_db
+
+    # changed evaluation settings are a different experiment: re-search,
+    # stored under a new context key (nothing overwritten)
+    ev3 = Evaluator(_conv_build, space, driver=driver, name="conv_tune",
+                    scale=0.2)
+    res4 = Tuner(ev3, HillClimb(), db=db, budget=5).run()
+    assert not res4.from_db
+    assert len(db.entries_for(res.design_fingerprint, res.space_hash)) == 2
+
+    # serving-side auto-load resolves the best valid config across contexts
+    hit = best_config_for(ev.graph, space, db=db)
+    assert hit is not None
+    cfg, cand = hit
+    assert cand in {res3.best.candidate, res4.best.candidate}
+    assert cfg == space.to_config(cand)
+
+
+def test_db_invalid_best_never_served(tmp_path):
+    """An entry whose best failed the numerics gate must not reach
+    serving, and a bisect run toward a different target is a different
+    context (no false DB hit)."""
+    from repro.tune.db import best_entry
+
+    db = TuningDB(tmp_path / "db.json")
+    space = conv2d_space()
+    # all-invalid run: zero tolerance fails every candidate
+    ev = Evaluator(_conv_build, space, tol_abs=0.0, tol_rel=0.0)
+    res = Tuner(ev, Bisection(target_us=1e9), db=db, budget=2).run()
+    assert not res.best.valid
+    assert "numerics gate" in res.summary()
+    assert best_entry(db, res.design_fingerprint, res.space_hash) is None
+    assert best_config_for(ev.graph, space, db=db) is None
+
+    # same strategy, different target -> different context -> no DB serve
+    ev2 = Evaluator(_conv_build, space, tol_abs=0.0, tol_rel=0.0)
+    res2 = Tuner(ev2, Bisection(target_us=1.0), db=db, budget=2).run()
+    assert not res2.from_db
+
+    # a valid run coexists and wins the serving lookup
+    ev3 = Evaluator(_conv_build, space)
+    res3 = Tuner(ev3, HillClimb(), db=db, budget=3).run()
+    assert best_config_for(ev3.graph, space, db=db) is not None
+    assert len(db.entries_for(res.design_fingerprint, res.space_hash)) == 3
+
+
+def test_tuner_force_researches(tmp_path):
+    db = TuningDB(tmp_path / "db.json")
+    ev = Evaluator(_conv_build, conv2d_space())
+    Tuner(ev, RandomSearch(seed=0), db=db, budget=2).run()
+    before = ev.n_evals
+    res = Tuner(ev, RandomSearch(seed=0), db=db, budget=2).run(force=True)
+    assert not res.from_db
+    assert ev.n_evals > before                 # evaluator ran again
+
+
+# -- shared versioned cache root (the eviction bugfix) -----------------------
+
+
+def test_cache_root_evicts_stale_versions(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    stale = tmp_path / "v1" / "designs"
+    stale.mkdir(parents=True)
+    (stale / "old.pkl").write_bytes(b"stale")
+    unrelated = tmp_path / "not_a_version"
+    unrelated.mkdir()
+
+    root = cachedir.cache_root("tune")
+    assert root == tmp_path / f"v{cachedir.CACHE_FORMAT_VERSION}" / "tune"
+    assert root.is_dir()
+    assert not (tmp_path / "v1").exists()      # stale version evicted
+    assert unrelated.exists()                  # non-version dirs untouched
+
+    # TuningDB defaults into the shared root
+    db = TuningDB()
+    assert db.path.parent == root
+    db.put("fp", "sh", {"best": {"candidate": {"unroll_factor": 4}}})
+    assert db.get("fp", "sh")["best"]["candidate"] == {"unroll_factor": 4}
+
+
+def test_tuning_db_discards_stale_schema(tmp_path):
+    path = tmp_path / "db.json"
+    path.write_text(json.dumps({"version": -1, "entries": {"k": {}}}))
+    db = TuningDB(path)
+    assert db.entries() == {}
+    db.put("a", "b", {"best": {}})
+    assert json.loads(path.read_text())["version"] == \
+        cachedir.CACHE_FORMAT_VERSION
+
+
+# -- CLI ---------------------------------------------------------------------
+
+
+def test_cli_conv2d_dry_and_db_rerun(tmp_path, capsys):
+    db_path = str(tmp_path / "cli_db.json")
+    res = cli_main(["--config", "conv2d", "--dry", "--budget", "3",
+                    "--db", db_path])
+    assert not res.from_db
+    assert res.best.latency_us <= res.baseline.latency_us
+    out = capsys.readouterr().out
+    assert "trial   1" in out and "best of" in out
+
+    res2 = cli_main(["--config", "conv2d", "--dry", "--budget", "3",
+                     "--db", db_path])
+    assert res2.from_db
+    assert "served from tuning DB" in capsys.readouterr().out
+
+    res3 = cli_main(["--config", "conv2d", "--dry", "--db", db_path,
+                     "--show"])
+    assert res3.from_db
+    assert res3.best.candidate == res2.best.candidate
