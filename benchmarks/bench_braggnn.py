@@ -33,10 +33,19 @@ def run(s: int = 1, img: int = 11) -> dict:
     design = driver.compile(build, name=f"braggnn_s{s}")
     g_raw, g = design.graph_raw, design.graph_opt
 
-    out: dict = {"build_s": round(design.timings["total_s"], 1),
+    out: dict = {"build_s": round(design.timings["total_s"], 2),
+                 "trace_s": round(design.timings.get("trace_s", 0.0), 2),
+                 "passes_s": round(design.timings.get("passes_s", 0.0), 2),
+                 "schedule_s": round(design.timings.get("schedule_s", 0.0), 2),
+                 # compiler throughput: ops entering each executed pass
+                 # application / total pass wall time — the first-class
+                 # perf-trajectory figure tracked across PRs
+                 "pass_ops_per_s": round(design.pass_throughput_ops_s()),
                  "ops_raw": len(g_raw.ops), "ops_opt": len(g.ops),
                  "pass_s": {k: round(v, 3)
                             for k, v in design.pass_time_by_name().items()},
+                 "passes_skipped": sum(1 for r in design.pass_reports
+                                       if r.skipped),
                  "rows": []}
 
     stages, ii = design.partition(3)
@@ -109,7 +118,11 @@ def main(print_csv: bool = True, s: int = 1, img: int = 11) -> dict:
     out = run(s=s, img=img)
     if print_csv:
         print(f"# BraggNN(s={s}, img={img}): ops {out['ops_raw']} -> "
-              f"{out['ops_opt']}, compile {out['build_s']}s")
+              f"{out['ops_opt']}, compile {out['build_s']}s "
+              f"(trace {out['trace_s']} / passes {out['passes_s']} / "
+              f"schedule {out['schedule_s']}; "
+              f"{out['pass_ops_per_s']:,} ops/s through the pass pipeline, "
+              f"{out['passes_skipped']} pass applications skipped)")
         print("# per-pass time: "
               + ", ".join(f"{k}={v}s" for k, v in out["pass_s"].items()))
         print("design,intervals,stage_ii,us_per_sample,dsp,ff,bram")

@@ -54,26 +54,70 @@ def _jsonable(obj):
     return repr(obj)
 
 
+#: bench_braggnn result fields mirrored into the top-level ``compiler``
+#: section: the machine-readable compile-time/throughput trajectory.
+_COMPILER_FIELDS = ("build_s", "trace_s", "passes_s", "schedule_s",
+                    "pass_ops_per_s", "passes_skipped", "ops_raw", "ops_opt")
+
+
 def write_report(results: dict, args, out_path=None) -> pathlib.Path:
     """Aggregate all results into ``BENCH_<date>.json`` at the repo root."""
     date = time.strftime("%Y-%m-%d")
     path = pathlib.Path(out_path) if out_path else \
         REPO_ROOT / f"BENCH_{date}.json"
-    # surface per-pass PassReport wall times as a first-class key so the
-    # perf trajectory of the compiler itself is machine-readable
+    # surface per-pass PassReport wall times and compiler throughput as
+    # first-class keys so the perf trajectory of the compiler itself is
+    # machine-readable across PRs
     pass_times = {}
+    compiler = {}
     bragg = results.get("bench_braggnn", {}).get("result") or {}
     if isinstance(bragg, dict) and "pass_s" in bragg:
         pass_times["braggnn"] = bragg["pass_s"]
+        compiler["braggnn"] = {k: bragg[k] for k in _COMPILER_FIELDS
+                               if k in bragg}
     report = {
         "date": date,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "args": {"fast": args.fast, "only": args.only},
         "pass_times_s": pass_times,
+        "compiler": compiler,
         "benchmarks": _jsonable(results),
     }
     path.write_text(json.dumps(report, indent=1, sort_keys=True))
     return path
+
+
+def compare_with_previous(report: dict, path: pathlib.Path) -> None:
+    """Print a before/after compile-perf comparison against the most recent
+    other ``BENCH_*.json`` in the repo root, when one exists."""
+    previous = sorted(p for p in REPO_ROOT.glob("BENCH_*.json")
+                      if p.resolve() != path.resolve())
+    if not previous:
+        return
+    prev_path = previous[-1]
+    try:
+        old = json.loads(prev_path.read_text())
+    except (OSError, json.JSONDecodeError):
+        return
+    old_b = (old.get("benchmarks", {}).get("bench_braggnn", {})
+             .get("result") or {})
+    new_b = (report["benchmarks"].get("bench_braggnn", {})
+             .get("result") or {})
+    if not (isinstance(old_b, dict) and isinstance(new_b, dict)
+            and old_b.get("build_s") and new_b.get("build_s")):
+        return
+    speedup = old_b["build_s"] / new_b["build_s"]
+    print(f"# compile-perf vs {prev_path.name}: build_s "
+          f"{old_b['build_s']} -> {new_b['build_s']} ({speedup:.1f}x)")
+    old_p, new_p = old_b.get("pass_s") or {}, new_b.get("pass_s") or {}
+    for name in sorted(set(old_p) | set(new_p)):
+        print(f"#   pass {name}: {old_p.get(name, '-')}s -> "
+              f"{new_p.get(name, '-')}s")
+    if new_b.get("pass_ops_per_s"):
+        print(f"#   pass-pipeline throughput: "
+              f"{new_b['pass_ops_per_s']:,} ops/s"
+              + (f" (was {old_b['pass_ops_per_s']:,})"
+                 if old_b.get("pass_ops_per_s") else ""))
 
 
 def main() -> None:
@@ -115,6 +159,8 @@ def main() -> None:
         _timed("bench_roofline", results, bench_roofline.main)
 
     path = write_report(results, args, args.out)
+    report = json.loads(path.read_text())
+    compare_with_previous(report, path)
     print(f"# aggregate report: {path}")
 
 

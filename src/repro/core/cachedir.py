@@ -23,7 +23,9 @@ from typing import Optional, Union
 #: when Graph/Schedule/CompiledDesign layout, pass semantics, or the tuning
 #: record schema change, so stale on-disk entries from older code versions
 #: become cache misses instead of loading into incompatible objects.
-CACHE_FORMAT_VERSION = 3
+#: v4: struct-of-arrays Graph serialisation (numpy columns replace the Op
+#: list) and the column-bytes graph fingerprint.
+CACHE_FORMAT_VERSION = 4
 
 _VERSION_DIR = re.compile(r"^v\d+$")
 

@@ -2,10 +2,16 @@
 
 Three execution backends for a scheduled DFG:
 
-  * ``evaluate``      — numpy functional simulation in program order.  With a
-                        ``FloatFormat`` this becomes the FloPoCo functional
-                        model (quantise after every operation), i.e. the
-                        reference the paper's testbenches compare RTL against.
+  * ``evaluate``      — numpy functional simulation.  With a ``FloatFormat``
+                        this becomes the FloPoCo functional model (quantise
+                        after every operation), i.e. the reference the
+                        paper's testbenches compare RTL against.  The DFG is
+                        levelised and each (level, opcode) group executes as
+                        one vectorised gather/compute/scatter over a dense
+                        ``(n_values, batch)`` value matrix — bit-identical
+                        to the historical per-op program-order loop (which
+                        survives in ``repro.core.legacy``; route through it
+                        with ``REPRO_LEGACY_IR=1``).
   * ``to_jax_fn``     — "RTL emission" for TPU: the DFG is levelised by its
                         schedule and each (cycle-level, opcode) group becomes
                         one vectorised gather/compute/scatter — a SIMD
@@ -19,11 +25,12 @@ Three execution backends for a scheduled DFG:
 
 from __future__ import annotations
 
+import os
 from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core.ir import Graph
+from repro.core.ir import OPCODES, Graph, GraphCols
 from repro.core.precision import FloatFormat, quantize_np
 
 
@@ -42,6 +49,88 @@ def _input_arrays(g: Graph, feeds: dict[str, np.ndarray], batch: int
                 vals[vid] = np.ascontiguousarray(
                     arr[(slice(None),) + idx], dtype=np.float32)
     return vals
+
+
+def levelize(c: GraphCols, n_values: int) -> np.ndarray:
+    """ASAP levels (unit delays) per op, computed as Kahn waves.
+
+    An op's level is 1 + the max level of its operand values (inputs and
+    constants sit at level 0) — the longest-path depth the historical per-op
+    loop computed sequentially.  Each wave resolves every op whose operands
+    are all known, so total work is linear in edges with one numpy step per
+    DAG level.
+    """
+    n = c.n
+    op_level = np.zeros(n, dtype=np.int64)
+    if n == 0:
+        return op_level
+    args = c.args
+    am = args >= 0
+    pa = np.where(am, c.producer[np.clip(args, 0, None)], -1)
+    dep = pa >= 0
+    indeg = dep.sum(axis=1)
+    # consumer CSR: edges producer-op -> consumer-op
+    pe = pa[dep]
+    ce = np.broadcast_to(np.arange(n)[:, None], pa.shape)[dep]
+    order = np.argsort(pe, kind="stable")
+    ce_s = ce[order]
+    counts = np.bincount(pe[order], minlength=n)
+    offs = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=offs[1:])
+    val_level = np.zeros(max(n_values, 1), dtype=np.int64)
+    frontier = np.flatnonzero(indeg == 0)
+    remaining = indeg
+    while frontier.size:
+        fa = args[frontier]
+        lv = np.where(fa >= 0, val_level[np.clip(fa, 0, None)] + 1, 0) \
+            .max(axis=1)
+        op_level[frontier] = lv
+        fr = c.result[frontier]
+        rmask = fr >= 0
+        val_level[fr[rmask]] = lv[rmask]
+        lens = counts[frontier]
+        tot = int(lens.sum())
+        if not tot:
+            break
+        base = np.repeat(offs[frontier], lens)
+        within = np.arange(tot) - np.repeat(np.cumsum(lens) - lens, lens)
+        cons = ce_s[base + within]
+        remaining = remaining - np.bincount(cons, minlength=n)
+        frontier = np.unique(cons[remaining[cons] == 0])
+    return op_level
+
+
+def _level_groups(c: GraphCols, n_values: int):
+    """Rows grouped by (level, opcode), levels ascending, rows in program
+    order within each group."""
+    if c.n == 0:      # passthrough design: outputs wired straight to inputs
+        return
+    op_level = levelize(c, n_values)
+    order = np.lexsort((np.arange(c.n), c.opcode, op_level))
+    lv_s = op_level[order]
+    oc_s = c.opcode[order]
+    brk = np.flatnonzero((np.diff(lv_s) != 0) | (np.diff(oc_s) != 0)) + 1
+    for rows in np.split(order, brk):
+        yield OPCODES[c.opcode[rows[0]]], rows
+
+
+def _assemble_outputs(g: Graph, batch: int, value_of
+                      ) -> dict[str, np.ndarray]:
+    """Scatter per-value (batch,) vectors into output tensors.
+
+    ``value_of(vid) -> (batch,)`` abstracts over the two simulators' value
+    stores (the legacy dict, the vectorised value matrix) so both paths
+    share one assembly.
+    """
+    outs: dict[str, np.ndarray] = {}
+    for name, table in g.outputs.items():
+        shape = tuple(max(i[d] for i in table) + 1
+                      for d in range(len(next(iter(table)))))
+        out = np.zeros((batch,) + shape, dtype=np.float32)
+        for idx, vid in table.items():
+            out[(slice(None),) + idx] = value_of(vid)
+        outs[name] = out
+    return outs
 
 
 def evaluate(g: Graph, feeds: dict[str, np.ndarray], *,
@@ -64,61 +153,69 @@ def evaluate(g: Graph, feeds: dict[str, np.ndarray], *,
     q = (lambda x: quantize_np(x, fmt)) if fmt is not None else (lambda x: x)
 
     vals = _input_arrays(g, feeds, batch)
-    for vid in list(vals):
-        vals[vid] = q(vals[vid])
-    for vid, c in g.consts.items():
-        vals[vid] = q(np.full((batch,), c, dtype=np.float32))
+    if os.environ.get("REPRO_LEGACY_IR", "") == "1":
+        from repro.core import legacy
+        for vid in list(vals):
+            vals[vid] = q(vals[vid])
+        for vid, cv in g.consts.items():
+            vals[vid] = q(np.full((batch,), cv, dtype=np.float32))
+        vals = legacy.evaluate(g, vals, batch, q)
+        return _assemble_outputs(g, batch, vals.__getitem__)
 
-    for op in g.ops:
-        a = op.args
-        oc = op.opcode
+    c = g.cols()
+    M = np.zeros((max(g.n_values, 1), batch), dtype=np.float32)
+    if vals:
+        ivids = np.fromiter(vals.keys(), dtype=np.int64, count=len(vals))
+        M[ivids] = q(np.stack(list(vals.values()), axis=0))
+    if g.consts:
+        cvids = np.fromiter(g.consts.keys(), dtype=np.int64,
+                            count=len(g.consts))
+        cvals = np.fromiter(g.consts.values(), dtype=np.float32,
+                            count=len(g.consts))
+        M[cvids] = q(np.broadcast_to(cvals[:, None],
+                                     (len(cvals), batch)).copy())
+
+    args, res = c.args, c.result
+    for oc, rows in _level_groups(c, g.n_values):
+        a0 = M[args[rows, 0]]
         if oc == "mulf":
-            r = vals[a[0]] * vals[a[1]]
+            r = a0 * M[args[rows, 1]]
         elif oc == "addf":
-            r = vals[a[0]] + vals[a[1]]
+            r = a0 + M[args[rows, 1]]
         elif oc == "subf":
-            r = vals[a[0]] - vals[a[1]]
+            r = a0 - M[args[rows, 1]]
         elif oc == "divf":
-            r = vals[a[0]] / vals[a[1]]
+            r = a0 / M[args[rows, 1]]
         elif oc == "sqrtf":
-            r = np.sqrt(vals[a[0]])
+            r = np.sqrt(a0)
         elif oc == "maxf":
-            r = np.maximum(vals[a[0]], vals[a[1]])
+            r = np.maximum(a0, M[args[rows, 1]])
         elif oc == "minf":
-            r = np.minimum(vals[a[0]], vals[a[1]])
+            r = np.minimum(a0, M[args[rows, 1]])
         elif oc == "negf":
-            r = -vals[a[0]]
+            r = -a0
         elif oc == "relu":
-            r = np.maximum(vals[a[0]], 0.0)
+            r = np.maximum(a0, 0.0)
         elif oc == "fmac":
             # fmac(b, c, a) = b*c + a, rounded once (fused on FPGA)
-            r = vals[a[0]] * vals[a[1]] + vals[a[2]]
+            r = a0 * M[args[rows, 1]] + M[args[rows, 2]]
         elif oc == "cmpugt":
-            r = (vals[a[0]] > vals[a[1]]).astype(np.float32)
+            r = (a0 > M[args[rows, 1]]).astype(np.float32)
         elif oc == "select":
-            r = np.where(vals[a[0]] > 0.5, vals[a[1]], vals[a[2]])
-        elif oc == "load":
-            r = vals[a[0]]
-        elif oc == "store":
-            r = vals[a[0]]
-        elif oc == "copy":
-            r = vals[a[0]]
+            r = np.where(a0 > 0.5, M[args[rows, 1]], M[args[rows, 2]])
+        elif oc in ("load", "store", "copy"):
+            r = a0
         else:  # pragma: no cover
             raise NotImplementedError(oc)
         if oc not in ("cmpugt", "load", "store", "copy"):
             r = q(r)
-        if op.result >= 0:
-            vals[op.result] = r
+        rmask = res[rows] >= 0
+        if rmask.all():
+            M[res[rows]] = r
+        elif rmask.any():
+            M[res[rows][rmask]] = r[rmask]
 
-    outs: dict[str, np.ndarray] = {}
-    for name, table in g.outputs.items():
-        shape = tuple(max(i[d] for i in table) + 1
-                      for d in range(len(next(iter(table)))))
-        out = np.zeros((batch,) + shape, dtype=np.float32)
-        for idx, vid in table.items():
-            out[(slice(None),) + idx] = vals[vid]
-        outs[name] = out
-    return outs
+    return _assemble_outputs(g, batch, M.__getitem__)
 
 
 # ---------------------------------------------------------------------------
@@ -136,31 +233,15 @@ def to_jax_fn(g: Graph) -> Callable[[dict[str, "np.ndarray"]], dict[str, "np.nda
     import jax
     import jax.numpy as jnp
 
-    # levelise
-    level = np.zeros(g.n_values, dtype=np.int64)
-    op_level = np.zeros(len(g.ops), dtype=np.int64)
-    for op in g.ops:
-        lv = 0
-        for a in op.args:
-            lv = max(lv, int(level[a]) + 1)
-        op_level[op.idx] = lv
-        if op.result >= 0:
-            level[op.result] = lv
-
-    # group ops by (level, opcode)
-    groups: dict[tuple[int, str], list] = {}
-    for op in g.ops:
-        groups.setdefault((int(op_level[op.idx]), op.opcode), []).append(op)
-    ordered = sorted(groups.items(), key=lambda kv: kv[0][0])
-
-    # precompute gather/scatter index arrays
+    c = g.cols()
+    # precompute gather/scatter index arrays per (level, opcode) group
     compiled_groups = []
-    for (lv, oc), ops in ordered:
-        n_args = max(len(o.args) for o in ops)
-        arg_idx = [np.array([o.args[i] if i < len(o.args) else 0
-                             for o in ops], dtype=np.int32)
+    for oc, rows in _level_groups(c, g.n_values):
+        ga = c.args[rows]
+        n_args = int((ga >= 0).sum(axis=1).max()) if len(rows) else 0
+        arg_idx = [np.where(ga[:, i] >= 0, ga[:, i], 0).astype(np.int32)
                    for i in range(n_args)]
-        res_idx = np.array([o.result for o in ops], dtype=np.int32)
+        res_idx = c.result[rows].astype(np.int32)
         compiled_groups.append((oc, arg_idx, res_idx))
 
     const_idx = np.array(sorted(g.consts), dtype=np.int32)

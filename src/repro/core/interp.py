@@ -27,7 +27,7 @@ import itertools
 from contextlib import contextmanager
 from typing import Iterator, Optional, Sequence, Union
 
-from repro.core.ir import Graph
+from repro.core.ir import OPCODE_ID, Graph
 
 Number = Union[int, float]
 
@@ -127,17 +127,26 @@ class MemRef:
         self._mem_token: dict[tuple[int, ...], int] = {}
 
     def _norm(self, idx) -> tuple[int, ...]:
+        shape = self.shape
+        if type(idx) is tuple and len(idx) == len(shape):
+            # fast path: plain in-bounds int tuple (the interpreter's own
+            # loop indices) — no copy, no per-axis int() coercion
+            for x, n in zip(idx, shape):
+                if type(x) is not int or x < 0 or x >= n:
+                    break
+            else:
+                return idx
         if not isinstance(idx, tuple):
             idx = (idx,)
-        if len(idx) != len(self.shape):
+        if len(idx) != len(shape):
             raise IndexError(
-                f"{self.name}: rank mismatch {idx} vs shape {self.shape}")
+                f"{self.name}: rank mismatch {idx} vs shape {shape}")
         out = []
-        for i, (x, n) in enumerate(zip(idx, self.shape)):
+        for i, (x, n) in enumerate(zip(idx, shape)):
             x = int(x)
             if not (0 <= x < n):
                 raise IndexError(
-                    f"{self.name}: index {idx} out of bounds {self.shape} "
+                    f"{self.name}: index {idx} out of bounds {shape} "
                     f"(axis {i})")
             out.append(x)
         return tuple(out)
@@ -145,9 +154,19 @@ class MemRef:
     # -- memref.load --------------------------------------------------------
 
     def __getitem__(self, idx) -> SymVal:
-        idx = self._norm(idx)
         ctx = self.ctx
-        sym = self.table.get(idx)
+        # fast path: a slot that already holds a symbol was bounds-checked
+        # when it was created — skip renormalisation
+        if type(idx) is tuple:
+            try:
+                sym = self.table.get(idx)
+            except TypeError:       # unhashable element (e.g. 0-d ndarray)
+                sym = None
+        else:
+            sym = None
+        if sym is None:
+            idx = self._norm(idx)
+            sym = self.table.get(idx)
         if sym is None:
             if self.kind in ("input", "weight"):
                 # lazily materialise an interface symbol
@@ -175,7 +194,14 @@ class MemRef:
     # -- memref.store -------------------------------------------------------
 
     def __setitem__(self, idx, value: Union[SymVal, Number]) -> None:
-        idx = self._norm(idx)
+        # fast path mirrors __getitem__: rewriting a slot that already holds
+        # a symbol needs no renormalisation
+        try:
+            known = type(idx) is tuple and idx in self.table
+        except TypeError:           # unhashable element (e.g. 0-d ndarray)
+            known = False
+        if not known:
+            idx = self._norm(idx)
         ctx = self.ctx
         val = ctx._as_val(value)
         ctx._record_write(self, idx)
@@ -226,10 +252,31 @@ class Context:
 
     def _emit(self, opcode: str, args: tuple[int, ...], *, array: str = "",
               result: Optional[int] = None) -> SymVal:
-        rid = self.graph.add_op(opcode, args, nest=self._cur_nest,
-                                rank=self._cur_rank, array=array,
-                                result=result)
-        return SymVal(self, rid)
+        # trace-time fast path: append straight into the graph's column
+        # buffers (the body of ``Graph.add_op``, inlined — this is the
+        # hottest call in symbolic interpretation)
+        g = self.graph
+        if g._lists is None:
+            g._mutable_lists()
+        o, a0, a1, a2, r, ne, rk, ai = g._lists
+        if result is None:
+            if opcode in ("store", "output"):   # same default as Graph.add_op
+                result = -1
+            else:
+                result = g.n_values
+                g.n_values = result + 1
+        n = len(args)
+        o.append(OPCODE_ID[opcode])
+        a0.append(args[0] if n > 0 else -1)
+        a1.append(args[1] if n > 1 else -1)
+        a2.append(args[2] if n > 2 else -1)
+        r.append(result)
+        ne.append(self._cur_nest)
+        rk.append(self._cur_rank)
+        ai.append(g.intern_array(array) if array else 0)
+        g._n_ops += 1
+        g._cols = None
+        return SymVal(self, result)
 
     # -- memrefs ------------------------------------------------------------
 

@@ -1,0 +1,467 @@
+"""The historical per-``Op`` (object-graph) compiler implementations.
+
+These are the literal PR-3 algorithms — pass rewrites driven one ``Op`` at a
+time through ``passes.Rewriter``, the per-op list scheduler, and the per-op
+functional simulator.  They are kept for two reasons:
+
+  * **Golden equivalence.**  The vectorised struct-of-arrays hot path in
+    ``passes`` / ``schedule`` / ``emit`` must produce *bit-identical*
+    op streams, schedules and evaluations.  The golden suite
+    (``tests/test_golden_equivalence.py``) runs every workload through both
+    paths and compares exactly.
+  * **Escape hatch.**  Setting ``REPRO_LEGACY_IR=1`` in the environment
+    routes ``passes.*``, ``schedule.list_schedule`` and ``emit.evaluate``
+    through these implementations at call time — a live A/B switch when
+    debugging a suspected vectorisation fault.
+
+Everything here consumes the SoA ``Graph`` through its ``ops`` record view,
+so the two paths share one IR type, one fingerprint, and one design cache.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Optional
+
+import numpy as np
+
+from repro.core.ir import (ARITH_OPS, DEFAULT_DELAYS, RESOURCE_CLASS, Graph,
+                           Op)
+
+# ---------------------------------------------------------------------------
+# Passes (paper §3.2) — the object-graph originals
+# ---------------------------------------------------------------------------
+
+
+def _rewriter(g: Graph):
+    from repro.core.passes import Rewriter  # deferred: passes imports us lazily
+    return Rewriter(g)
+
+
+def dce(g: Graph) -> Graph:
+    """Dead-code elimination backwards from graph outputs.
+
+    ``store`` ops are always considered live (baseline no-forwarding mode
+    models a tool that cannot eliminate memory traffic).
+    """
+    live_vals = set(g.output_values())
+    keep = [False] * g.n_ops
+    for op in reversed(g.ops):
+        if op.opcode == "store" or (op.result >= 0 and op.result in live_vals):
+            keep[op.idx] = True
+            live_vals.update(op.args)
+    rw = _rewriter(g)
+    for op in g.ops:
+        if keep[op.idx]:
+            rw.keep(op)
+    return rw.finish()
+
+
+def cse(g: Graph) -> Graph:
+    """Common-subexpression elimination (commutative-aware)."""
+    commutative = {"mulf", "addf", "maxf", "minf"}
+    seen: dict[tuple, int] = {}
+    rw = _rewriter(g)
+    for op in g.ops:
+        if op.opcode not in ARITH_OPS:
+            rw.keep(op)
+            continue
+        args = tuple(rw.lookup(a) for a in op.args)
+        key_args = tuple(sorted(args)) if op.opcode in commutative else args
+        key = (op.opcode, key_args)
+        hit = seen.get(key)
+        if hit is not None:
+            rw.replace(op.result, hit)
+        else:
+            seen[key] = op.result
+            rw.keep(op, args=args)
+    return rw.finish()
+
+
+def relu_recompose(g: Graph) -> Graph:
+    """select(cmpf_ugt(x, 0), x, 0) -> relu(x)   (paper §3.2 item 2)."""
+    uses = g.use_counts()
+    zero_consts = {vid for vid, v in g.consts.items() if v == 0.0}
+    # result vid -> (op, x vid) for candidate compares
+    cmps: dict[int, tuple[Op, int]] = {}
+    for op in g.ops:
+        if (op.opcode == "cmpugt" and len(op.args) == 2
+                and op.args[1] in zero_consts):
+            cmps[op.result] = (op, op.args[0])
+    dead_cmp: set[int] = set()
+    rw = _rewriter(g)
+    for op in g.ops:
+        if op.opcode == "select" and op.args[0] in cmps:
+            cmp_op, x = cmps[op.args[0]]
+            if op.args[1] == x and op.args[2] in zero_consts:
+                rw.emit("relu", (x,), nest=op.nest, rank=op.rank,
+                        result=op.result)
+                if uses[cmp_op.result] == 1:
+                    dead_cmp.add(cmp_op.idx)
+                continue
+        rw.keep(op)
+    out = rw.finish()
+    if dead_cmp:
+        out = dce(out)
+    return out
+
+
+def reduction_tree(g: Graph, *, threshold: int = 4) -> Graph:
+    """Rebalance sequential reduction chains into binary trees (§3.2 item 4).
+
+    A chain is a maximal run  o_1, ..., o_n  of the same associative opcode
+    where each o_{t+1} consumes o_t's result and that result has no other
+    use.  The chain is replaced by a balanced tree over its leaves, halving
+    depth from O(n) to O(log n) — the dominant latency lever for the inner
+    reduction loops of conv/linear layers.
+    """
+    associative = {"addf", "maxf", "minf"}
+    uses = g.use_counts()
+    ops = list(g.ops)
+    # chain_next[i] = op idx of the chain continuation of op i (or -1)
+    chain_next = [-1] * len(ops)
+    chain_prev = [-1] * len(ops)
+    producer = g.producer
+    for op in ops:
+        if op.opcode not in associative:
+            continue
+        for a in op.args:
+            p = producer[a]
+            if p < 0:
+                continue
+            pred = ops[p]
+            if (pred.opcode == op.opcode and uses[pred.result] == 1
+                    and pred.nest == op.nest and pred.rank == op.rank):
+                chain_next[p] = op.idx
+                chain_prev[op.idx] = p
+                break  # at most one chain predecessor
+    in_chain = [False] * len(ops)
+    chains: list[list[int]] = []  # lists of op idxs, head first
+    for op in ops:
+        if chain_prev[op.idx] >= 0 or chain_next[op.idx] < 0:
+            continue  # not a chain head
+        run = [op.idx]
+        cur = op.idx
+        while chain_next[cur] >= 0:
+            cur = chain_next[cur]
+            run.append(cur)
+        if len(run) >= threshold - 1:  # n ops reduce n+1 leaves
+            chains.append(run)
+            for i in run:
+                in_chain[i] = True
+
+    tail_to_chain = {run[-1]: run for run in chains}
+    rw = _rewriter(g)
+    for op in ops:
+        if in_chain[op.idx] and op.idx not in tail_to_chain:
+            continue  # interior chain op: dropped, replaced at the tail
+        if op.idx in tail_to_chain:
+            run = tail_to_chain[op.idx]
+            opcode = op.opcode
+            # collect leaves in chain order
+            leaves: list[int] = []
+            chain_results = {ops[i].result for i in run}
+            first = ops[run[0]]
+            leaves.extend(first.args)
+            for i in run[1:]:
+                for a in ops[i].args:
+                    if a not in chain_results:
+                        leaves.append(a)
+            # balanced pairwise tree
+            level = leaves
+            while len(level) > 1:
+                nxt: list[int] = []
+                for i in range(0, len(level) - 1, 2):
+                    if len(level) == 2:
+                        # root of the tree takes over the chain's result id
+                        vid = rw.emit(opcode, (level[i], level[i + 1]),
+                                      nest=op.nest, rank=op.rank,
+                                      result=op.result)
+                    else:
+                        vid = rw.emit(opcode, (level[i], level[i + 1]),
+                                      nest=op.nest, rank=op.rank)
+                    nxt.append(vid)
+                if len(level) % 2:
+                    nxt.append(level[-1])
+                level = nxt
+            continue
+        rw.keep(op)
+    return rw.finish()
+
+
+def fmac_coalesce(g: Graph) -> Graph:
+    """addf(a, mulf(b, c)) with single-use mul -> fmac(b, c, a) (§3.2 item 3)."""
+    uses = g.use_counts()
+    muls: dict[int, Op] = {}
+    for op in g.ops:
+        if op.opcode == "mulf" and uses[op.result] == 1:
+            muls[op.result] = op
+    fused_muls: set[int] = set()
+    rw = _rewriter(g)
+    for op in g.ops:
+        if op.idx in fused_muls:
+            continue
+        if op.opcode == "addf":
+            a0, a1 = op.args
+            mul = None
+            addend = None
+            if a1 in muls:
+                mul, addend = muls[a1], a0
+            elif a0 in muls:
+                mul, addend = muls[a0], a1
+            if mul is not None:
+                rw.emit("fmac", (mul.args[0], mul.args[1], addend),
+                        nest=op.nest, rank=op.rank, result=op.result)
+                fused_muls.add(mul.idx)
+                continue
+        rw.keep(op)
+    out = rw.finish()
+    return dce(out)
+
+
+LEGACY_PASSES = {
+    "cse": cse,
+    "dce": dce,
+    "relu_recompose": relu_recompose,
+    "reduction_tree": reduction_tree,
+    "fmac_coalesce": fmac_coalesce,
+}
+
+
+# ---------------------------------------------------------------------------
+# Scheduling (paper §3.3) — the per-op original
+# ---------------------------------------------------------------------------
+
+
+class _UnitPool:
+    """Earliest-free-unit allocator with lazy instantiation up to capacity."""
+
+    __slots__ = ("capacity", "heap", "allocated")
+
+    def __init__(self, capacity: int):
+        self.capacity = max(1, capacity)
+        self.heap: list[tuple[int, int]] = []  # (free_time, unit_id)
+        self.allocated = 0
+
+    def acquire(self, t_ready: int, occupancy: int) -> tuple[int, int]:
+        """Returns (start_time, unit_id)."""
+        if self.heap and self.heap[0][0] <= t_ready:
+            _, uid = heapq.heappop(self.heap)
+            start = t_ready
+        elif self.allocated < self.capacity:
+            uid = self.allocated
+            self.allocated += 1
+            start = t_ready
+        else:
+            free, uid = heapq.heappop(self.heap)
+            start = max(free, t_ready)
+        heapq.heappush(self.heap, (start + occupancy, uid))
+        return start, uid
+
+
+def list_schedule(
+    g: Graph,
+    *,
+    binding: str = "pool",
+    unroll_factor: Optional[int] = None,
+    ports_per_array: int = 2,
+    pipelined_units: bool = False,
+    delays: Optional[dict[str, int]] = None,
+    alap_compact: bool = True,
+):
+    """The historical per-op list scheduler (see ``schedule.list_schedule``)."""
+    from repro.core.schedule import Schedule
+    assert binding in ("pool", "rank"), binding
+    delays = delays or DEFAULT_DELAYS
+    ops = list(g.ops)
+    n = len(ops)
+    start = [0] * n
+    ready_at = [0] * g.n_values
+    keys: list[Optional[tuple]] = [None] * n  # op -> (class, unit) binding
+
+    K = g.K() if unroll_factor is None else max(1, unroll_factor)
+    pools: dict[str, _UnitPool] = {}
+    port_pools: dict[str, _UnitPool] = {}
+    unit_free: dict[tuple, int] = {}   # rank-binding mode
+    units_used: dict[str, set] = {}
+
+    for op in ops:
+        d = delays.get(op.opcode, 0)
+        occ = 1 if pipelined_units else max(d, 1)
+        t = 0
+        for a in op.args:
+            ta = ready_at[a]
+            if ta > t:
+                t = ta
+        cls = RESOURCE_CLASS.get(op.opcode)
+        if cls == "port":
+            pool = port_pools.get(op.array)
+            if pool is None:
+                pool = port_pools[op.array] = _UnitPool(ports_per_array)
+            t, uid = pool.acquire(t, occ)
+            keys[op.idx] = ("port", op.array, uid)
+            units_used.setdefault("port", set()).add((op.array, uid))
+        elif cls is not None:
+            if binding == "pool":
+                pool = pools.get(cls)
+                if pool is None:
+                    pool = pools[cls] = _UnitPool(K)
+                t, uid = pool.acquire(t, occ)
+                keys[op.idx] = (cls, uid)
+                units_used.setdefault(cls, set()).add(uid)
+            else:
+                k_i = g.nest_parallel_space.get(op.nest, 1)
+                lanes = k_i if unroll_factor is None else max(
+                    1, min(unroll_factor, k_i))
+                rank = op.rank if op.rank >= 0 else 0
+                key = (cls, rank % lanes)
+                tf = unit_free.get(key, 0)
+                if tf > t:
+                    t = tf
+                unit_free[key] = t + occ
+                keys[op.idx] = key
+                units_used.setdefault(cls, set()).add(key)
+        start[op.idx] = t
+        if op.result >= 0:
+            ready_at[op.result] = t + d
+
+    makespan = 0
+    for op in ops:
+        end = start[op.idx] + delays.get(op.opcode, 0)
+        if end > makespan:
+            makespan = end
+
+    if alap_compact:
+        start = _alap_compact(g, ops, start, makespan, delays,
+                              pipelined_units, keys)
+
+    nest_spans: dict[int, tuple[int, int]] = {}
+    for op in ops:
+        s = start[op.idx]
+        e = s + delays.get(op.opcode, 0)
+        lo, hi = nest_spans.get(op.nest, (s, e))
+        nest_spans[op.nest] = (min(lo, s), max(hi, e))
+
+    peak_live = _peak_live_values(g, ops, start, delays)
+    units = {c: len(k) for c, k in units_used.items()}
+    return Schedule(start=start, makespan=makespan, resource_units=units,
+                    nest_spans=nest_spans, peak_live=peak_live, n_ops=n)
+
+
+def _alap_compact(g: Graph, ops: list[Op], start: list[int], makespan: int,
+                  delays: dict[str, int], pipelined_units: bool,
+                  keys: list[Optional[tuple]]) -> list[int]:
+    """Retime ops as late as possible without growing the makespan."""
+    new_start = list(start)
+    latest = [makespan] * g.n_values
+    next_same_key: dict[int, int] = {}
+    last_seen: dict[tuple, int] = {}
+    for op in reversed(ops):
+        k = keys[op.idx]
+        if k is not None:
+            if k in last_seen:
+                next_same_key[op.idx] = last_seen[k]
+            last_seen[k] = op.idx
+    for op in reversed(ops):
+        d = delays.get(op.opcode, 0)
+        limit = makespan - d
+        if op.result >= 0:
+            limit = min(limit, latest[op.result] - d)
+        nxt = next_same_key.get(op.idx)
+        if nxt is not None:
+            occupancy = 1 if pipelined_units else max(d, 1)
+            limit = min(limit, new_start[nxt] - occupancy)
+        t = new_start[op.idx]
+        if limit > t:
+            t = limit
+        new_start[op.idx] = t
+        for a in op.args:
+            if t < latest[a]:
+                latest[a] = t
+    return new_start
+
+
+def _peak_live_values(g: Graph, ops: list[Op], start: list[int],
+                      delays: dict[str, int]) -> int:
+    """Peak number of simultaneously live values — the FF-usage analogue."""
+    last_use: dict[int, int] = {}
+    born: dict[int, int] = {}
+    for op in ops:
+        if op.result >= 0:
+            born[op.result] = start[op.idx] + delays.get(op.opcode, 0)
+        for a in op.args:
+            t = start[op.idx]
+            if last_use.get(a, -1) < t:
+                last_use[a] = t
+    events: list[tuple[int, int]] = []
+    for vid, b in born.items():
+        e = last_use.get(vid)
+        if e is None or e < b:
+            continue
+        events.append((b, 1))
+        events.append((e + 1, -1))
+    events.sort()
+    live = peak = 0
+    for _, delta in events:
+        live += delta
+        if live > peak:
+            peak = live
+    return peak
+
+
+# ---------------------------------------------------------------------------
+# Functional simulation — the per-op original
+# ---------------------------------------------------------------------------
+
+
+def evaluate(g: Graph, vals: dict[int, np.ndarray], batch: int,
+             q) -> dict[int, np.ndarray]:
+    """Per-op program-order simulation over pre-scattered input vectors.
+
+    ``vals`` maps value id -> (batch,) float32 vector (inputs and constants
+    already quantised by the caller); returns the same dict filled with
+    every computed value.  The caller (``emit.evaluate``) assembles output
+    tensors — shared with the vectorised path so the two only differ in how
+    the op stream is executed.
+    """
+    for op in g.ops:
+        a = op.args
+        oc = op.opcode
+        if oc == "mulf":
+            r = vals[a[0]] * vals[a[1]]
+        elif oc == "addf":
+            r = vals[a[0]] + vals[a[1]]
+        elif oc == "subf":
+            r = vals[a[0]] - vals[a[1]]
+        elif oc == "divf":
+            r = vals[a[0]] / vals[a[1]]
+        elif oc == "sqrtf":
+            r = np.sqrt(vals[a[0]])
+        elif oc == "maxf":
+            r = np.maximum(vals[a[0]], vals[a[1]])
+        elif oc == "minf":
+            r = np.minimum(vals[a[0]], vals[a[1]])
+        elif oc == "negf":
+            r = -vals[a[0]]
+        elif oc == "relu":
+            r = np.maximum(vals[a[0]], 0.0)
+        elif oc == "fmac":
+            # fmac(b, c, a) = b*c + a, rounded once (fused on FPGA)
+            r = vals[a[0]] * vals[a[1]] + vals[a[2]]
+        elif oc == "cmpugt":
+            r = (vals[a[0]] > vals[a[1]]).astype(np.float32)
+        elif oc == "select":
+            r = np.where(vals[a[0]] > 0.5, vals[a[1]], vals[a[2]])
+        elif oc == "load":
+            r = vals[a[0]]
+        elif oc == "store":
+            r = vals[a[0]]
+        elif oc == "copy":
+            r = vals[a[0]]
+        else:  # pragma: no cover
+            raise NotImplementedError(oc)
+        if oc not in ("cmpugt", "load", "store", "copy"):
+            r = q(r)
+        if op.result >= 0:
+            vals[op.result] = r
+    return vals

@@ -49,32 +49,72 @@ from repro.core.schedule import (Schedule, ScheduleParams, list_schedule,
 # Pass registry
 # ---------------------------------------------------------------------------
 
-#: name -> Graph-rewriting callable.  Populated by ``register_pass``.
-PASS_REGISTRY: dict[str, Callable[..., Graph]] = {}
+
+@dataclasses.dataclass(frozen=True)
+class PassInfo:
+    """A registered pass plus the metadata the incremental fixpoint uses.
+
+    matches:
+        the opcodes whose presence/shape this pass's pattern depends on, or
+        ``None`` for "anything" (liveness/use-count driven passes).  A pass
+        is skipped in a fixpoint round when no opcode it matches was touched
+        since its own last application — it provably has nothing new to see.
+    self_clean:
+        True when the pass is a fixpoint of itself (running it twice in a
+        row never changes the second output).  Non-self-clean passes (e.g.
+        ``reduction_tree``, which re-rebalances the leftmost spine of its
+        own trees) stay dirty after any application that changed the graph.
+    """
+
+    fn: Callable[..., Graph]
+    matches: Optional[frozenset] = None
+    self_clean: bool = False
 
 
-def register_pass(name: str) -> Callable[[Callable[..., Graph]], Callable[..., Graph]]:
+#: name -> PassInfo.  Populated by ``register_pass``.
+PASS_REGISTRY: dict[str, PassInfo] = {}
+
+
+def register_pass(name: str, *, matches: Optional[frozenset] = None,
+                  self_clean: bool = False
+                  ) -> Callable[[Callable[..., Graph]], Callable[..., Graph]]:
     """Register ``fn`` as a named pass usable in any pipeline.
 
     ``fn(g, **options) -> Graph`` must return a rewritten graph whose
     program order is a valid topological order (``Rewriter.finish`` already
-    guarantees this for the built-in passes).
+    guarantees this for the built-in passes).  A pass that has nothing to
+    rewrite should return its input graph *object* unchanged — that is the
+    signal the incremental fixpoint uses to mark it clean; passes that
+    rewrite may annotate the result with ``_touched`` (a frozenset of
+    opcode names) so downstream passes with disjoint ``matches`` can be
+    skipped.  Conservative defaults (``matches=None``, ``self_clean=False``)
+    make an unannotated external pass always re-run while anything changes.
     """
     def deco(fn: Callable[..., Graph]) -> Callable[..., Graph]:
         if name in PASS_REGISTRY:
             raise ValueError(f"pass {name!r} already registered")
-        PASS_REGISTRY[name] = fn
+        PASS_REGISTRY[name] = PassInfo(
+            fn, frozenset(matches) if matches is not None else None,
+            self_clean)
         return fn
     return deco
 
 
 # The paper's §3.2 inventory, registered under the names the string pipeline
 # always used so existing ``pipeline=(...)`` arguments keep working.
-register_pass("cse")(passes.cse)
-register_pass("relu_recompose")(passes.relu_recompose)
+# ``matches`` is the dependence footprint of each pattern:
+#   * cse keys on every arith row (a touched arith op can create a dup);
+#   * relu_recompose only reads cmpugt/select rows (and consts, which never
+#     change after tracing);
+#   * reduction_tree and fmac_coalesce gate on use counts, which any op
+#     change can shift — they match everything;
+#   * dce is liveness-driven — any change can strand a value.
+register_pass("cse", matches=passes.ARITH_OPS, self_clean=True)(passes.cse)
+register_pass("relu_recompose", matches=frozenset({"cmpugt", "select"}),
+              self_clean=True)(passes.relu_recompose)
 register_pass("reduction_tree")(passes.reduction_tree)
-register_pass("fmac_coalesce")(passes.fmac_coalesce)
-register_pass("dce")(passes.dce)
+register_pass("fmac_coalesce", self_clean=True)(passes.fmac_coalesce)
+register_pass("dce", self_clean=True)(passes.dce)
 
 DEFAULT_PIPELINE: tuple[str, ...] = tuple(passes.DEFAULT_PIPELINE)
 
@@ -111,6 +151,11 @@ class PassReport:
     wall_s: float
     topo_ok: Optional[bool] = None       # None = check not requested
     spot_err: Optional[float] = None     # None = spot-verify not requested
+    #: True when the incremental fixpoint proved this application a no-op
+    #: (none of the pass's matched opcodes were touched since its last run)
+    #: and skipped it.  Skipped reports carry zero wall time and identical
+    #: before/after histograms.
+    skipped: bool = False
 
     @property
     def ops_delta(self) -> int:
@@ -124,6 +169,9 @@ class PassReport:
         return {k: v for k, v in delta.items() if v}
 
     def summary(self) -> str:
+        if self.skipped:
+            return (f"[round {self.round}] {self.name}: skipped "
+                    f"(matched opcodes untouched)")
         d = self.hist_delta()
         extra = f" {d}" if d else ""
         return (f"[round {self.round}] {self.name}: "
@@ -186,15 +234,37 @@ class PassManager:
     def run(self, g: Graph) -> tuple[Graph, list[PassReport]]:
         passes.hoist_globals_check(g)
         reports: list[PassReport] = []
+        ALL = None   # dirty sentinel: everything touched
+        # dirty[p]: opcodes touched since p's last application (ALL before
+        # its first).  A round skips p when its matched opcodes are all
+        # untouched — p would provably find nothing new.  The fixpoint
+        # criterion itself is unchanged (a full round with a stable op
+        # count terminates), so skipping never alters the final graph.
+        dirty: dict[str, Optional[set]] = {n: ALL for n in self.pipeline}
+        changed_last: dict[str, bool] = {}
+        infos = {n: PASS_REGISTRY[n] for n in self.pipeline}
         for rnd in range(self.max_rounds):
             before = len(g.ops)
             for name in self.pipeline:
-                fn = PASS_REGISTRY[name]
+                info = infos[name]
+                d = dirty[name]
+                must_run = (d is ALL
+                            or (not info.self_clean
+                                and changed_last.get(name, False)))
+                if not must_run and d:
+                    must_run = info.matches is None or bool(info.matches & d)
+                if not must_run:
+                    hist = g.op_histogram()
+                    reports.append(PassReport(
+                        name=name, round=rnd, ops_before=len(g.ops),
+                        ops_after=len(g.ops), hist_before=hist,
+                        hist_after=hist, wall_s=0.0, skipped=True))
+                    continue
                 opts = self.pass_options.get(name, {})
                 hist_before = g.op_histogram()
                 n_before = len(g.ops)
                 t0 = time.perf_counter()
-                g_new = fn(g, **opts)
+                g_new = info.fn(g, **opts)
                 wall = time.perf_counter() - t0
                 rep = PassReport(
                     name=name, round=rnd, ops_before=n_before,
@@ -211,6 +281,18 @@ class PassManager:
                 if self.spot_verify is not None:
                     rep.spot_err = self.spot_verify(g, g_new, name)
                 reports.append(rep)
+                changed = g_new is not g
+                changed_last[name] = changed
+                dirty[name] = set()
+                if changed:
+                    touched = getattr(g_new, "_touched", None)
+                    for other in self.pipeline:
+                        if other == name:
+                            continue
+                        if touched is None or dirty[other] is ALL:
+                            dirty[other] = ALL
+                        else:
+                            dirty[other] = dirty[other] | touched
                 g = g_new
             if len(g.ops) == before:
                 break
@@ -284,9 +366,15 @@ def graph_fingerprint(g: Graph) -> str:
     if cached is not None:
         return cached
     h = hashlib.sha256()
-    for op in g.ops:
-        h.update(f"{op.opcode}|{op.args}|{op.result}|{op.nest}|{op.rank}|"
-                 f"{op.array};".encode())
+    # hash the raw column bytes — same information as the historical per-op
+    # string rendering at a fraction of the cost (17 MB/s of ops -> one
+    # memcpy-speed digest); array names are hashed alongside so interned
+    # array ids keep their meaning
+    c = g.cols()
+    h.update(f"soa:{c.n}:{g.n_values}".encode())
+    for arr in (c.opcode, c.args, c.result, c.nest, c.rank, c.array_id):
+        h.update(np.ascontiguousarray(arr).tobytes())
+    h.update(repr(g.array_names).encode())
     h.update(repr(sorted(g.consts.items())).encode())
     for label, tables in (("in", g.inputs), ("out", g.outputs)):
         for name in sorted(tables):
@@ -353,6 +441,18 @@ class CompiledDesign:
         for rep in self.pass_reports:
             out[rep.name] = out.get(rep.name, 0.0) + rep.wall_s
         return out
+
+    def pass_throughput_ops_s(self) -> float:
+        """Ops/second through the pass pipeline (executed applications only).
+
+        The compiler-throughput figure benchmarks track across PRs: total
+        ops entering each executed pass application divided by total pass
+        wall time.  0.0 when nothing was timed (e.g. a cache-served design
+        compiled before this field existed).
+        """
+        wall = sum(r.wall_s for r in self.pass_reports if not r.skipped)
+        ops = sum(r.ops_before for r in self.pass_reports if not r.skipped)
+        return ops / wall if wall > 0 else 0.0
 
     # -- execution backends -------------------------------------------------
 

@@ -27,15 +27,29 @@ which shortens register lifetimes — the FF-usage analogue.
 Terminology mirrors the paper's evaluation: the *interval count* is the
 makespan in clock cycles; end-to-end latency = interval count x achieved
 clock period (10 ns target).
+
+Implementation: the scheduler consumes the IR's struct-of-arrays columns.
+Per-op delays, occupancies, resource classes, rank lanes, the ALAP
+next-on-same-unit table, nest spans, the makespan and the peak-live (FF)
+profile are all computed as vectorised array operations; only the ASAP
+resource-serialisation core — inherently sequential, each op's issue slot
+depends on every earlier allocation — runs as a tight scalar loop over
+primitive int lists (no ``Op`` records, no attribute dispatch).  The
+historical per-op scheduler survives in ``repro.core.legacy`` and the two
+produce bit-identical schedules (golden suite).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import os
 from typing import Optional
 
-from repro.core.ir import DEFAULT_DELAYS, RESOURCE_CLASS, Graph
+import numpy as np
+
+from repro.core.ir import (CLASS_TABLE, PORT_CLASS_ID, RESOURCE_CLASSES,
+                           Graph, delay_table)
 
 CLOCK_NS = 10.0  # paper §4: all designs synthesised for a 10 ns target clock
 
@@ -158,84 +172,185 @@ def list_schedule(
         pipelined_units = params.pipelined_units
         alap_compact = params.alap_compact
     assert binding in ("pool", "rank"), binding
-    delays = delays or DEFAULT_DELAYS
-    n = len(g.ops)
+    if os.environ.get("REPRO_LEGACY_IR", "") == "1":
+        from repro.core import legacy
+        return legacy.list_schedule(
+            g, binding=binding, unroll_factor=unroll_factor,
+            ports_per_array=ports_per_array,
+            pipelined_units=pipelined_units, delays=delays,
+            alap_compact=alap_compact)
+
+    c = g.cols()
+    n = c.n
+    if n == 0:
+        return Schedule(start=[], makespan=0, resource_units={},
+                        nest_spans={}, peak_live=0, n_ops=0)
+
+    dtab = delay_table(delays)
+    delay_arr = dtab[c.opcode]                       # int64[n]
+    occ_arr = (np.ones(n, dtype=np.int64) if pipelined_units
+               else np.maximum(delay_arr, 1))
+    cls_arr = CLASS_TABLE[c.opcode]                  # 0 = unconstrained
+
+    # resource keys are packed ints: (class axis) * STRIDE + unit.  The
+    # class axis separates per-class pools, per-array port pools, and
+    # rank-mode lanes so no two pools ever share a key.
+    STRIDE = n + max(g.n_values, 1) + 2
+    lane_arr = None
+    if binding == "rank":
+        nest_u, nest_inv = np.unique(c.nest, return_inverse=True)
+        k_i = np.array([g.nest_parallel_space.get(int(t), 1) for t in nest_u],
+                       dtype=np.int64)
+        lanes = k_i[nest_inv]
+        if unroll_factor is not None:
+            lanes = np.maximum(1, np.minimum(unroll_factor, lanes))
+        lane_arr = (np.where(c.rank >= 0, c.rank, 0) % lanes).tolist()
+
+    # ---- sequential ASAP core over primitive lists ------------------------
+    a0l = c.args[:, 0].tolist()
+    a1l = c.args[:, 1].tolist()
+    a2l = c.args[:, 2].tolist()
+    resl = c.result.tolist()
+    dl = delay_arr.tolist()
+    ol = occ_arr.tolist()
+    cl = cls_arr.tolist()
+    arrl = c.array_id.tolist()
+
+    ready = [0] * max(g.n_values, 1)
     start = [0] * n
-    ready_at = [0] * g.n_values
-    keys: list[Optional[tuple]] = [None] * n  # op -> (class, unit) binding
-
+    key_l = [-1] * n                 # packed resource key per op (-1 = none)
     K = g.K() if unroll_factor is None else max(1, unroll_factor)
-    pools: dict[str, _UnitPool] = {}
-    port_pools: dict[str, _UnitPool] = {}
-    unit_free: dict[tuple, int] = {}   # rank-binding mode
-    units_used: dict[str, set] = {}
+    K = max(1, K)
+    ports_cap = max(1, ports_per_array)
+    # Pool state, inlined for the hot loop.  Heap entries pack
+    # (free_time, unit_id) into one int — free_time * capacity + uid orders
+    # exactly like the historical tuple (free ascending, unit id tie-break)
+    # but compares at machine-int speed instead of tuple speed.
+    pool_heap: dict[int, list[int]] = {}   # class id -> packed heap
+    pool_alloc: dict[int, int] = {}        # class id -> units instantiated
+    port_heap: dict[int, list[int]] = {}   # array id -> packed heap
+    port_alloc: dict[int, int] = {}
+    unit_free: dict[int, int] = {}         # packed key -> free time (rank)
+    rank_units: set[int] = set()           # packed keys seen in rank mode
+    n_classes = len(RESOURCE_CLASSES)
+    pool_mode = binding == "pool"
+    heappush = heapq.heappush
+    heappop = heapq.heappop
 
-    for op in g.ops:
-        d = delays.get(op.opcode, 0)
-        occ = 1 if pipelined_units else max(d, 1)
+    for i in range(n):
         t = 0
-        for a in op.args:
-            ta = ready_at[a]
+        a = a0l[i]
+        if a >= 0:
+            ta = ready[a]
             if ta > t:
                 t = ta
-        cls = RESOURCE_CLASS.get(op.opcode)
-        if cls == "port":
-            pool = port_pools.get(op.array)
-            if pool is None:
-                pool = port_pools[op.array] = _UnitPool(ports_per_array)
-            t, uid = pool.acquire(t, occ)
-            keys[op.idx] = ("port", op.array, uid)
-            units_used.setdefault("port", set()).add((op.array, uid))
-        elif cls is not None:
-            if binding == "pool":
-                pool = pools.get(cls)
-                if pool is None:
-                    pool = pools[cls] = _UnitPool(K)
-                t, uid = pool.acquire(t, occ)
-                keys[op.idx] = (cls, uid)
-                units_used.setdefault(cls, set()).add(uid)
+            a = a1l[i]
+            if a >= 0:
+                ta = ready[a]
+                if ta > t:
+                    t = ta
+                a = a2l[i]
+                if a >= 0:
+                    ta = ready[a]
+                    if ta > t:
+                        t = ta
+        cls = cl[i]
+        if cls:
+            if cls == PORT_CLASS_ID:
+                aid = arrl[i]
+                heap = port_heap.get(aid)
+                if heap is None:
+                    heap = port_heap[aid] = []
+                    port_alloc[aid] = 0
+                cap = ports_cap
+                alloc_map, pool_id = port_alloc, aid
+                key_base = (n_classes + aid) * STRIDE
+            elif pool_mode:
+                heap = pool_heap.get(cls)
+                if heap is None:
+                    heap = pool_heap[cls] = []
+                    pool_alloc[cls] = 0
+                cap = K
+                alloc_map, pool_id = pool_alloc, cls
+                key_base = cls * STRIDE
             else:
-                k_i = g.nest_parallel_space.get(op.nest, 1)
-                lanes = k_i if unroll_factor is None else max(
-                    1, min(unroll_factor, k_i))
-                rank = op.rank if op.rank >= 0 else 0
-                key = (cls, rank % lanes)
+                key = cls * STRIDE + lane_arr[i]
                 tf = unit_free.get(key, 0)
                 if tf > t:
                     t = tf
-                unit_free[key] = t + occ
-                keys[op.idx] = key
-                units_used.setdefault(cls, set()).add(key)
-        start[op.idx] = t
-        if op.result >= 0:
-            ready_at[op.result] = t + d
+                unit_free[key] = t + ol[i]
+                key_l[i] = key
+                rank_units.add(key)
+                start[i] = t
+                r = resl[i]
+                if r >= 0:
+                    ready[r] = t + dl[i]
+                continue
+            # earliest-free-unit acquire (packed-int heap)
+            if heap and heap[0] <= t * cap + cap - 1:
+                packed = heappop(heap)
+                uid = packed % cap
+            else:
+                alloc = alloc_map[pool_id]
+                if alloc < cap:
+                    uid = alloc
+                    alloc_map[pool_id] = alloc + 1
+                else:
+                    packed = heappop(heap)
+                    free = packed // cap
+                    uid = packed % cap
+                    if free > t:
+                        t = free
+            heappush(heap, (t + ol[i]) * cap + uid)
+            key_l[i] = key_base + uid
+        start[i] = t
+        r = resl[i]
+        if r >= 0:
+            ready[r] = t + dl[i]
 
-    makespan = 0
-    for op in g.ops:
-        end = start[op.idx] + delays.get(op.opcode, 0)
-        if end > makespan:
-            makespan = end
+    start_arr = np.asarray(start, dtype=np.int64)
+    makespan = int((start_arr + delay_arr).max())
 
     if alap_compact:
-        start = _alap_compact(g, start, makespan, delays, pipelined_units,
-                              keys)
+        start = _alap_compact(g, start, makespan, dl, ol,
+                              key_l, a0l, a1l, a2l, resl)
+        start_arr = np.asarray(start, dtype=np.int64)
 
-    nest_spans: dict[int, tuple[int, int]] = {}
-    for op in g.ops:
-        s = start[op.idx]
-        e = s + delays.get(op.opcode, 0)
-        lo, hi = nest_spans.get(op.nest, (s, e))
-        nest_spans[op.nest] = (min(lo, s), max(hi, e))
+    # ---- vectorised post-processing ---------------------------------------
+    ends = start_arr + delay_arr
+    nest_u, nest_inv = np.unique(c.nest, return_inverse=True)
+    lo = np.full(len(nest_u), np.iinfo(np.int64).max, dtype=np.int64)
+    hi = np.full(len(nest_u), np.iinfo(np.int64).min, dtype=np.int64)
+    np.minimum.at(lo, nest_inv, start_arr)
+    np.maximum.at(hi, nest_inv, ends)
+    nest_spans = {int(t): (int(a), int(b))
+                  for t, a, b in zip(nest_u, lo, hi)}
 
-    peak_live = _peak_live_values(g, start, delays)
-    units = {c: len(k) for c, k in units_used.items()}
-    return Schedule(start=start, makespan=makespan, resource_units=units,
-                    nest_spans=nest_spans, peak_live=peak_live, n_ops=n)
+    peak_live = _peak_live_values(c, start_arr, delay_arr, makespan,
+                                  g.n_values)
+
+    units: dict[str, int] = {}
+    if port_alloc:
+        units["port"] = sum(port_alloc.values())
+    if pool_mode:
+        for cls, alloc in pool_alloc.items():
+            units[RESOURCE_CLASSES[cls]] = alloc
+    elif rank_units:
+        per_cls = np.bincount(
+            np.asarray(sorted(rank_units), dtype=np.int64) // STRIDE,
+            minlength=n_classes)
+        for cls in range(1, n_classes):
+            if per_cls[cls]:
+                units[RESOURCE_CLASSES[cls]] = int(per_cls[cls])
+    return Schedule(start=[int(t) for t in start], makespan=makespan,
+                    resource_units=units, nest_spans=nest_spans,
+                    peak_live=peak_live, n_ops=n)
 
 
 def _alap_compact(g: Graph, start: list[int], makespan: int,
-                  delays: dict[str, int], pipelined_units: bool,
-                  keys: list[Optional[tuple]]) -> list[int]:
+                  dl: list[int], ol: list[int], key_l: list[int],
+                  a0l: list[int], a1l: list[int], a2l: list[int],
+                  resl: list[int]) -> list[int]:
     """Retime ops as late as possible without growing the makespan.
 
     Implements the paper's ALAP scheduling "amongst the subtrees" of
@@ -243,62 +358,77 @@ def _alap_compact(g: Graph, start: list[int], makespan: int,
     keeps its unit assignment and may not move past the next op scheduled on
     the same unit, so the forward schedule's resource feasibility and
     program order per unit are preserved.
+
+    The next-on-same-unit table is computed vectorised (one stable argsort
+    over the packed resource keys); the reverse retiming sweep itself is a
+    tight scalar loop — each op's slack depends on its consumers' already-
+    retimed positions.
     """
+    n = len(start)
+    key_arr = np.asarray(key_l, dtype=np.int64)
+    order = np.argsort(key_arr, kind="stable")
+    next_same = np.full(n, -1, dtype=np.int64)
+    if n > 1:
+        same = key_arr[order[:-1]] == key_arr[order[1:]]
+        same &= key_arr[order[:-1]] >= 0
+        next_same[order[:-1][same]] = order[1:][same]
+    nsl = next_same.tolist()
+
     new_start = list(start)
-    latest = [makespan] * g.n_values
-    next_same_key: dict[int, int] = {}
-    last_seen: dict[tuple, int] = {}
-    for op in reversed(g.ops):
-        k = keys[op.idx]
-        if k is not None:
-            if k in last_seen:
-                next_same_key[op.idx] = last_seen[k]
-            last_seen[k] = op.idx
-    for op in reversed(g.ops):
-        d = delays.get(op.opcode, 0)
+    latest = [makespan] * max(g.n_values, 1)
+    for i in range(n - 1, -1, -1):
+        d = dl[i]
         limit = makespan - d
-        if op.result >= 0:
-            limit = min(limit, latest[op.result] - d)
-        nxt = next_same_key.get(op.idx)
-        if nxt is not None:
-            occupancy = 1 if pipelined_units else max(d, 1)
-            limit = min(limit, new_start[nxt] - occupancy)
-        t = new_start[op.idx]
+        r = resl[i]
+        if r >= 0:
+            lr = latest[r] - d
+            if lr < limit:
+                limit = lr
+        nx = nsl[i]
+        if nx >= 0:
+            lim2 = new_start[nx] - ol[i]
+            if lim2 < limit:
+                limit = lim2
+        t = new_start[i]
         if limit > t:
             t = limit
-        new_start[op.idx] = t
-        for a in op.args:
+        new_start[i] = t
+        a = a0l[i]
+        if a >= 0:
             if t < latest[a]:
                 latest[a] = t
+            a = a1l[i]
+            if a >= 0:
+                if t < latest[a]:
+                    latest[a] = t
+                a = a2l[i]
+                if a >= 0 and t < latest[a]:
+                    latest[a] = t
     return new_start
 
 
-def _peak_live_values(g: Graph, start: list[int],
-                      delays: dict[str, int]) -> int:
+def _peak_live_values(c, start_arr: np.ndarray, delay_arr: np.ndarray,
+                      makespan: int, n_values: int) -> int:
     """Peak number of simultaneously live values — the FF-usage analogue."""
-    last_use: dict[int, int] = {}
-    born: dict[int, int] = {}
-    for op in g.ops:
-        if op.result >= 0:
-            born[op.result] = start[op.idx] + delays.get(op.opcode, 0)
-        for a in op.args:
-            t = start[op.idx]
-            if last_use.get(a, -1) < t:
-                last_use[a] = t
-    events: list[tuple[int, int]] = []
-    for vid, b in born.items():
-        e = last_use.get(vid)
-        if e is None or e < b:
-            continue
-        events.append((b, 1))
-        events.append((e + 1, -1))
-    events.sort()
-    live = peak = 0
-    for _, delta in events:
-        live += delta
-        if live > peak:
-            peak = live
-    return peak
+    if n_values == 0:
+        return 0
+    born = np.full(n_values, -1, dtype=np.int64)
+    has_res = c.result >= 0
+    born[c.result[has_res]] = (start_arr + delay_arr)[has_res]
+    last_use = np.full(n_values, -1, dtype=np.int64)
+    am = c.args >= 0
+    flat_args = c.args[am].astype(np.int64)
+    flat_t = np.broadcast_to(start_arr[:, None], c.args.shape)[am]
+    np.maximum.at(last_use, flat_args, flat_t)
+    mask = (born >= 0) & (last_use >= born)
+    if not mask.any():
+        return 0
+    b = born[mask]
+    e = last_use[mask] + 1
+    hist = np.zeros(makespan + 2, dtype=np.int64)
+    np.add.at(hist, b, 1)
+    np.add.at(hist, e, -1)
+    return int(np.cumsum(hist).max())
 
 
 def partition_stages(g: Graph, sched: Schedule, n_stages: int

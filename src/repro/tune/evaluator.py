@@ -31,12 +31,19 @@ import numpy as np
 from repro.core import emit, verify
 from repro.core.interp import Context
 from repro.core.ir import Graph
+from repro.core.ir import OPCODES as ir_OPCODES
 from repro.core.pipeline import CompiledDesign, CompilerDriver
 from repro.tune.space import Candidate, SearchSpace
 
-#: Opcodes counted as one FLOP (fmac counts two) by the roofline estimate.
-_ARITH_OPS = {"add": 1, "sub": 1, "mul": 1, "div": 1, "sqrt": 1, "fmac": 2,
-              "max": 1, "cmp": 1, "relu": 1, "select": 1}
+#: FLOPs per opcode (fmac counts two) for the roofline estimate, as a dense
+#: per-opcode-id lookup aligned with ``ir.OPCODES``.  (The historical table
+#: keyed on resource-class-style names — "add", "mul" — which never matched
+#: the actual "addf"/"mulf" opcodes, so plain adds and muls were costed 0.)
+_FLOPS_BY_NAME = {"addf": 1, "subf": 1, "mulf": 1, "divf": 1, "sqrtf": 1,
+                  "fmac": 2, "maxf": 1, "minf": 1, "cmpugt": 1, "negf": 1,
+                  "relu": 1, "select": 1}
+_FLOPS_TABLE = np.array([_FLOPS_BY_NAME.get(name, 0) for name in ir_OPCODES],
+                        dtype=np.int64)
 
 
 @dataclasses.dataclass
@@ -106,7 +113,7 @@ def roofline_estimate_us(design: CompiledDesign) -> float:
     """
     from repro.launch.roofline import HBM_BW, PEAK_FLOPS
     g = design.graph_opt
-    flops = sum(_ARITH_OPS.get(op.opcode, 0) for op in g.ops)
+    flops = int(_FLOPS_TABLE[g.cols().opcode].sum())
     bytes_moved = 4.0 * g.n_values
     return max(flops / PEAK_FLOPS, bytes_moved / HBM_BW) * 1e6
 

@@ -1,0 +1,193 @@
+"""Golden equivalence: the vectorised struct-of-arrays compiler hot path
+must be *bit-identical* to the historical per-``Op`` object-graph path.
+
+Every pass, the full fixpoint pipeline, the scheduler (all binding modes,
+including memory ports in no-forwarding mode), the functional simulator and
+the ``CompiledDesign`` artifact are run through both implementations on
+BraggNN(s=1) and the conv2d workload, comparing op streams, value-id
+spaces, schedules and design content hashes exactly.
+
+The legacy path is reachable two ways, both covered here:
+  * calling ``repro.core.legacy`` directly;
+  * setting ``REPRO_LEGACY_IR=1``, which reroutes ``passes.*``,
+    ``schedule.list_schedule`` and ``emit.evaluate`` at call time.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (CompilerDriver, Context, emit, frontend, legacy,
+                        passes, pipeline, verify)
+from repro.core.precision import FP_5_4
+from repro.core.schedule import list_schedule
+
+PASS_NAMES = ("cse", "dce", "relu_recompose", "reduction_tree",
+              "fmac_coalesce")
+
+
+def _braggnn_build(ctx):
+    frontend.braggnn(ctx, s=1, img=7)
+
+
+def _conv2d_build(ctx):
+    x = ctx.memref("input", (1, 2, 8, 8), "input")
+    w = ctx.memref("w", (3, 2, 3, 3), "weight")
+    b = ctx.memref("b", (3,), "weight")
+    out = ctx.memref("out", (1, 3, 6, 6), "output")
+    frontend.conv2d(ctx, x, w, b, out)
+
+
+def _trace(build, forward=True):
+    ctx = Context(forward=forward)
+    build(ctx)
+    return ctx.finalize()
+
+
+def _stream(g):
+    """The exact op stream: opcode, operands, result, nest, rank, array."""
+    return [(o.opcode, o.args, o.result, o.nest, o.rank, o.array)
+            for o in g.ops]
+
+
+def _graphs_identical(a, b):
+    assert a.n_values == b.n_values
+    assert _stream(a) == _stream(b)
+    assert a.outputs == b.outputs
+    assert a.inputs == b.inputs
+    assert pipeline.graph_fingerprint(a) == pipeline.graph_fingerprint(b)
+
+
+def _schedules_identical(a, b):
+    assert a.start == b.start
+    assert a.makespan == b.makespan
+    assert a.resource_units == b.resource_units
+    assert a.nest_spans == b.nest_spans
+    assert a.peak_live == b.peak_live
+
+
+@pytest.fixture(scope="module", params=["braggnn", "conv2d"])
+def workload(request):
+    build = _braggnn_build if request.param == "braggnn" else _conv2d_build
+    return request.param, _trace(build)
+
+
+def test_each_pass_bit_identical(workload):
+    _, g = workload
+    for name in PASS_NAMES:
+        g_new = getattr(passes, name)(g)
+        g_old = getattr(legacy, name)(g)
+        _graphs_identical(g_new, g_old)
+
+
+def test_pipeline_fixpoint_bit_identical(workload, monkeypatch):
+    _, g = workload
+    g_new = passes.optimize(g)
+    monkeypatch.setenv("REPRO_LEGACY_IR", "1")
+    g_old = passes.optimize(g)
+    monkeypatch.delenv("REPRO_LEGACY_IR")
+    _graphs_identical(g_new, g_old)
+
+
+def test_schedule_bit_identical(workload):
+    _, g = workload
+    g_opt = passes.optimize(g)
+    for kwargs in ({}, {"binding": "rank"}, {"unroll_factor": 4},
+                   {"alap_compact": False}, {"pipelined_units": True}):
+        _schedules_identical(list_schedule(g_opt, **kwargs),
+                             legacy.list_schedule(g_opt, **kwargs))
+
+
+def test_schedule_ports_bit_identical():
+    """No-forwarding mode: surviving load/store ops bind to per-array
+    memory-port pools — the port discipline must match too."""
+    g = _trace(_conv2d_build, forward=False)
+    for kwargs in ({}, {"ports_per_array": 1}, {"binding": "rank"}):
+        _schedules_identical(list_schedule(g, **kwargs),
+                             legacy.list_schedule(g, **kwargs))
+
+
+def test_evaluate_bit_identical(workload, monkeypatch):
+    name, g = workload
+    g_opt = passes.optimize(g)
+    feeds = verify.random_feeds(g, batch=3, seed=0, scale=0.4)
+    for fmt in (None, FP_5_4):
+        out_new = emit.evaluate(g_opt, feeds, fmt=fmt)
+        monkeypatch.setenv("REPRO_LEGACY_IR", "1")
+        out_old = emit.evaluate(g_opt, feeds, fmt=fmt)
+        monkeypatch.delenv("REPRO_LEGACY_IR")
+        assert set(out_new) == set(out_old)
+        for k in out_old:
+            np.testing.assert_array_equal(out_new[k], out_old[k])
+
+
+def test_compiled_design_content_hash_identical(workload, monkeypatch):
+    """The full driver artifact agrees: design hash, optimised graph
+    fingerprint, schedule, makespan."""
+    name, g = workload
+    d_new = CompilerDriver().compile(g, name=name)
+    monkeypatch.setenv("REPRO_LEGACY_IR", "1")
+    d_old = CompilerDriver().compile(g, name=name)
+    monkeypatch.delenv("REPRO_LEGACY_IR")
+    assert d_new.design_hash == d_old.design_hash
+    _graphs_identical(d_new.graph_opt, d_old.graph_opt)
+    _schedules_identical(d_new.schedule, d_old.schedule)
+    assert d_new.makespan == d_old.makespan
+
+
+# ---------------------------------------------------------------------------
+# Rewriter shim regressions (the micro-fix satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_rewriter_lookup_long_replacement_chain():
+    """A replacement chain of 10k links must resolve to the root, stay
+    correct across interleaved queries, and path-compress (second lookup of
+    the deepest link is O(1): the whole chain points at the root)."""
+    g = _trace(_conv2d_build)
+    rw = passes.Rewriter(g)
+    n = 10_000
+    for i in range(n):
+        rw.replace(i + 1, i)          # i+1 -> i -> ... -> 0
+    assert rw.lookup(n) == 0
+    # compressed: every visited link now points directly at the root
+    assert all(rw.repl[i] == 0 for i in range(1, n + 1))
+    assert rw.lookup(n // 2) == 0
+    assert rw.lookup(0) == 0          # the root resolves to itself
+    # a later replacement extends the chain through the compressed root
+    rw.replace(0, n + 7)
+    assert rw.lookup(n) == n + 7
+
+
+def test_cse_single_lookup_on_kept_ops():
+    """CSE resolves each kept op's operands exactly once (the historical
+    code looked them up a second time inside ``keep``) and still produces
+    the same graph."""
+    ctx = Context()
+    x = ctx.memref("x", (2,), "input")
+    out = ctx.memref("out", (3,), "output")
+    with ctx.sequential("dups"):
+        a = x[0] * x[1]
+        b = x[1] * x[0]          # commutative duplicate of a
+        c = a + b                # becomes a + a after replacement
+        d = b + a                # duplicate of c after replacement
+        out[0] = c
+        out[1] = d
+        out[2] = b
+    g = ctx.finalize()
+    g_new = passes.cse(g)
+    g_old = legacy.cse(g)
+    _graphs_identical(g_new, g_old)
+    muls = [o for o in g_new.ops if o.opcode == "mulf"]
+    assert len(muls) == 1
+    adds = [o for o in g_new.ops if o.opcode == "addf"]
+    assert len(adds) == 1
+    # every surviving operand reference resolved through the dup mapping
+    assert adds[0].args == (muls[0].result, muls[0].result)
+
+
+def test_rewriter_keep_accepts_resolved_args():
+    g = _trace(_conv2d_build)
+    op = g.ops[0]
+    rw = passes.Rewriter(g)
+    rw.keep(op, args=op.args)
+    assert rw.out.ops[0].args == op.args

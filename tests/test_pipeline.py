@@ -95,11 +95,20 @@ def test_topo_check_and_spot_verify_hooks():
     g = _trace(_small_build)
     pm = PassManager(topo_check=True, spot_verify=True)
     g_opt, reports = pm.run(g)
-    for rep in reports:
+    executed = [r for r in reports if not r.skipped]
+    assert executed, "at least one executed pass application"
+    for rep in executed:
         assert rep.topo_ok is True
         assert rep.spot_err is not None
         # reassociation may change rounding, but only slightly
         assert rep.spot_err < 1e-3
+    for rep in reports:
+        if rep.skipped:
+            # a skipped application is a proven no-op: no wall time, no
+            # graph change, hooks not re-run
+            assert rep.wall_s == 0.0
+            assert rep.ops_delta == 0
+            assert rep.hist_before == rep.hist_after
 
 
 # -- cache -------------------------------------------------------------------
