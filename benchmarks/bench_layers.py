@@ -15,7 +15,10 @@ its tool time explodes with u while symbolic interpretation stays flat.
 
 from __future__ import annotations
 
-from repro.core import CompilerConfig, CompilerDriver, DesignCache, frontend
+import dataclasses
+
+import repro.hls as hls
+from repro.core import frontend
 from repro.core.schedule import CLOCK_NS
 
 UNROLL_FACTORS = (1, 4, 16, 64, 256, 1024)
@@ -63,11 +66,11 @@ def _builders():
 def run() -> list[dict]:
     # sweep workload: no config is ever re-compiled, so keep the memory
     # cache tiny instead of pinning every design for the whole sweep
-    driver = CompilerDriver(cache=DesignCache(max_memory_entries=2))
+    session = hls.Session(max_memory_entries=2)
     rows = []
     for name, build in _builders().items():
-        # OpenHLS design: one CompilerDriver.compile call is the whole flow
-        design = driver.compile(build, name=name)
+        # OpenHLS design: one hls compile call is the whole flow
+        design = session.compile(build, name=name)
         res = design.schedule.resources()
         rows.append({
             "layer": name, "design": "openhls", "unroll": "full",
@@ -78,11 +81,17 @@ def run() -> list[dict]:
             "tool_s": round(design.timings["total_s"], 3),
         })
         # Vitis-like baseline at increasing unroll: trace once in
-        # no-forwarding mode, then one config (= one cache entry) per u
-        g2 = driver.trace(build, forward=False)
+        # no-forwarding mode, then one config (= one cache entry) per u —
+        # ``with_config`` reuses the traced graph across the sweep
+        cfg0 = hls.CompilerConfig(pipeline=(), forward=False,
+                                  unroll_factor=UNROLL_FACTORS[0])
+        d_base = session.compile(hls.trace(build, forward=False),
+                                 name=f"{name}_u{UNROLL_FACTORS[0]}",
+                                 config=cfg0)
         for u in UNROLL_FACTORS:
-            cfg = CompilerConfig(pipeline=(), forward=False, unroll_factor=u)
-            d_u = driver.compile(g2, name=f"{name}_u{u}", config=cfg)
+            d_u = d_base if u == UNROLL_FACTORS[0] else d_base.with_config(
+                dataclasses.replace(cfg0, unroll_factor=u),
+                name=f"{name}_u{u}")
             res_u = d_u.schedule.resources()
             rows.append({
                 "layer": name, "design": "baseline", "unroll": u,

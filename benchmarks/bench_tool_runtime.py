@@ -3,21 +3,22 @@
 Fig. 2's point: static store-load forwarding over a fully unrolled conv
 explodes (577,419 s at 128x128 trip count 147,456); symbolic interpretation
 unrolls the same nests in seconds.  We sweep the conv image size and report
-the full ``CompilerDriver.compile`` stage timings (trace / passes /
+the full ``repro.hls`` compile stage timings (trace / passes /
 schedule) plus the per-pass wall-time breakdown from the ``PassReport``s —
 the trend line that replaces the paper's hours-scale curve.
 """
 
 from __future__ import annotations
 
-from repro.core import CompilerDriver, DesignCache, frontend
+import repro.hls as hls
+from repro.core import frontend
 
 IMAGE_SIZES = (8, 16, 32, 64, 96, 128)
 
 
 def run() -> list[dict]:
     # sweep workload: each size compiles once; don't pin all designs
-    driver = CompilerDriver(cache=DesignCache(max_memory_entries=1))
+    session = hls.Session(max_memory_entries=1)
     rows = []
     for img in IMAGE_SIZES:
         def build(ctx, img=img):
@@ -26,7 +27,7 @@ def run() -> list[dict]:
             out = ctx.memref("out", (1, 1, img, img), "output")
             frontend.conv2d(ctx, x, w, None, out, padding=1)
 
-        design = driver.compile(build, name=f"conv_{img}")
+        design = session.compile(build, name=f"conv_{img}")
         t = design.timings
         rows.append({
             "image": img, "trip_count": img * img * 9,

@@ -4,17 +4,20 @@
     PYTHONPATH=src python examples/braggnn_serve.py --tuned
     PYTHONPATH=src python examples/braggnn_serve.py --pipeline cse,dce
 
-Trains BraggNN briefly on synthetic Bragg peaks, compiles the full OpenHLS
-design (schedule + pipeline report next to the paper's numbers), then
-serves batched peak-localisation requests through the fused reduced-
-precision path — (5,4) by default, or whatever format the tuned candidate
-carries — and reports throughput.
+Trains BraggNN briefly on synthetic Bragg peaks, binds the trained weights
+into the declarative module graph (``models.braggnn.build``), and compiles
+it through the public API — ``repro.hls.compile`` auto-lowers the module
+to the paper's loop nests via the bridge (bit-identical to the hand-
+written ``frontend.braggnn``).  Batched peak-localisation requests are
+then served through ``Design.serve``'s fused reduced-precision tensor
+path — (5,4) by default, or whatever format the tuned candidate carries.
 
 ``--tuned`` auto-loads the best known compile configuration from the
-persistent ``TuningDB`` (populate it with
-``python -m repro.tune --config braggnn``); ``--pipeline`` overrides the
-pass pipeline by hand.  Designs are cached under the shared versioned
-cache root, so warm runs serve the schedule from disk.
+persistent ``TuningDB`` via ``Design.apply_tuned`` (populate it with
+``python -m repro.tune --config braggnn``; a miss names the DB path it
+probed); ``--pipeline`` overrides the pass pipeline by hand.  Designs are
+cached under the shared versioned cache root (``cache=True``), so warm
+runs serve the schedule from disk.
 """
 
 import argparse
@@ -23,10 +26,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import CompilerConfig, CompilerDriver, cache_root, frontend
+import repro.hls as hls
 from repro.core.pipeline import parse_pipeline_spec
 from repro.models import braggnn
-from repro.nn import module
 from repro.optim import adamw
 
 
@@ -41,40 +43,11 @@ def parse_args(argv=None):
     return ap.parse_args(argv)
 
 
-def resolve_config(args, graph):
-    """(compile config, serve fmt key, source tag): tuned > --pipeline >
-    default.  ``graph`` is the already-traced BraggNN DFG (tracing is the
-    dominant cost — never repeat it)."""
-    if args.tuned:
-        from repro.tune import TuningDB, best_config_for, braggnn_space
-        space = braggnn_space()
-        hit = best_config_for(graph, space, db=TuningDB(args.db))
-        if hit is None:
-            print("--tuned: no TuningDB entry for this design/space yet — "
-                  "run `python -m repro.tune --config braggnn` first; "
-                  "serving the default config")
-            return CompilerConfig(n_stages=3), "5_4", "default"
-        config, candidate = hit
-        fmt = candidate.get("precision", "5_4")
-        fmt = None if fmt == "fp32" else fmt
-        return config, fmt, f"tuned ({candidate.label()})"
-    if args.pipeline is not None:
-        try:
-            names = parse_pipeline_spec(args.pipeline)
-        except ValueError as e:
-            raise SystemExit(str(e))
-        return CompilerConfig(pipeline=names, n_stages=3), "5_4", \
-            f"--pipeline {','.join(names) or '(none)'}"
-    return CompilerConfig(n_stages=3), "5_4", "default"
-
-
-def main(argv=None) -> None:
-    args = parse_args(argv)
-
-    # --- train briefly on synthetic peaks --------------------------------
-    params = module.init_tree(braggnn.specs(1), jax.random.key(0))
+def train(model: hls.ModuleGraph, steps: int = 150) -> dict:
+    """Brief synthetic-peak training run; returns the trained param tree."""
+    params = model.init_params(jax.random.key(0))
     opt_cfg = adamw.AdamWConfig(peak_lr=2e-3, warmup_steps=10,
-                                total_steps=150, weight_decay=0.0)
+                                total_steps=steps, weight_decay=0.0)
     state = adamw.init_state(params)
 
     @jax.jit
@@ -86,45 +59,66 @@ def main(argv=None) -> None:
         return p2, s2, l
 
     key = jax.random.key(1)
-    for i in range(150):
+    for i in range(steps):
         x, y = braggnn.synthetic_peaks(jax.random.fold_in(key, i), 64)
         params, state, l = step(params, state, x, y)
     print(f"trained BraggNN: loss {float(l):.4f}")
+    return params
 
-    # --- the OpenHLS schedule (paper's deployment artifact), served from
-    # --- the shared design cache on warm runs ------------------------------
-    driver = CompilerDriver(cache_dir=cache_root("designs"))
+
+def main(argv=None) -> None:
+    args = parse_args(argv)
+
+    # --- describe once, train, bind ----------------------------------------
+    model = braggnn.build(s=1)
+    model = model.bind(train(model))
+
+    # --- compile through the public API (shared on-disk design cache) ------
+    config, serve_fmt, source = hls.CompilerConfig(n_stages=3), "5_4", \
+        "default"
+    if args.pipeline is not None:
+        try:
+            names = parse_pipeline_spec(args.pipeline)
+        except ValueError as e:
+            raise SystemExit(str(e))
+        config = hls.CompilerConfig(pipeline=names, n_stages=3)
+        source = f"--pipeline {','.join(names) or '(none)'}"
+
+    tuned_space = db = None
+    if args.tuned:
+        from repro.tune import TuningDB, braggnn_space
+        tuned_space = braggnn_space()
+        db = TuningDB(args.db) if args.db else None
     t0 = time.perf_counter()
-    graph = driver.trace(lambda ctx: frontend.braggnn(ctx, s=1))
-    config, serve_fmt, source = resolve_config(args, graph)
-    design = driver.compile(graph, name="braggnn_s1", config=config)
+    # the tuned config (if any) is resolved before the single compile; a
+    # TuningDB miss prints which DB path was probed
+    design = hls.compile(model, name="braggnn_s1", config=config,
+                         cache=True, tuned=tuned_space, db=db)
+    if design.tuned_candidate is not None:
+        fmt = design.tuned_candidate.get("precision", "5_4")
+        serve_fmt = None if fmt == "fp32" else fmt
+        source = f"tuned ({design.tuned_candidate.label()})"
     compile_s = time.perf_counter() - t0
+
     # report the latency of the configuration actually deployed: stage II
     # when the config pipelines, plain makespan when it does not
     stage = (f"{design.config.n_stages}-stage II={design.stage_ii}"
              if design.stage_ii is not None else "unpipelined")
-    served_from = "cache" if driver.cache.hits else "cold compile"
+    served_from = "cache" if design.session.stats()["hits"] else \
+        "cold compile"
     print(f"OpenHLS schedule [{source}] ({served_from}, {compile_s:.1f}s): "
           f"{design.makespan} intervals total, {stage} -> "
           f"{design.sample_latency_us:.2f} us/sample "
           f"(paper: 1238 total, 3-stage II=480 -> 4.8 us/sample)")
 
     # --- serve batches at the deployed precision ---------------------------
-    infer = jax.jit(lambda p, xx: braggnn.forward(p, xx, fmt=serve_fmt))
     x, y = braggnn.synthetic_peaks(jax.random.key(7), 1024)
-    jax.block_until_ready(infer(params, x))
-    t0 = time.perf_counter()
-    reps = 10
-    for _ in range(reps):
-        pred = infer(params, x)
-    jax.block_until_ready(pred)
-    dt = time.perf_counter() - t0
+    report = design.serve([x] * 10, fmt=serve_fmt, backend="tensor",
+                          collect=True)
+    pred = report.outputs[-1]
     err_px = float(jnp.mean(jnp.abs(pred / 10.0 - y))) * 11
-    fmt_label = "fp32" if serve_fmt is None else \
-        f"({serve_fmt.replace('_', ',')})"
-    print(f"served {reps * 1024} samples: "
-          f"{dt / (reps * 1024) * 1e6:.2f} us/sample on CPU, "
-          f"mean localisation error {err_px:.3f} px at {fmt_label}")
+    print(f"{report.summary()}; "
+          f"mean localisation error {err_px:.3f} px")
 
 
 if __name__ == "__main__":

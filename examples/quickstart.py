@@ -3,20 +3,21 @@
     PYTHONPATH=src python examples/quickstart.py
     PYTHONPATH=src python examples/quickstart.py --pipeline cse,dce
 
-One ``CompilerDriver.compile()`` call runs the whole Fig. 1 flow: the
-conv2d loop nest is symbolically interpreted into an SSA DFG (store-load
-forwarding included), optimised, scheduled, and bundled as a
-``CompiledDesign``.  We then behaviourally verify it, quantise to FloPoCo
-(5,4), and run the emitted SIMD design.  ``--pipeline`` selects which
-registered passes run (comma-separated, in order) instead of the default
-§3.2 pipeline.
+One ``repro.hls.compile()`` call runs the whole Fig. 1 flow: the conv2d
+loop nest is symbolically interpreted into an SSA DFG (store-load
+forwarding included), optimised, scheduled, and returned as a ``Design``
+handle.  We then behaviourally verify it, quantise to FloPoCo (5,4), and
+run the emitted SIMD design.  ``--pipeline`` selects which registered
+passes run (comma-separated, in order) instead of the default §3.2
+pipeline.
 """
 
 import argparse
 
 import numpy as np
 
-from repro.core import CompilerConfig, CompilerDriver, FP_5_4, frontend
+import repro.hls as hls
+from repro.core import FP_5_4, frontend
 from repro.core.pipeline import DEFAULT_PIPELINE, parse_pipeline_spec
 
 
@@ -36,46 +37,39 @@ def main(argv=None) -> None:
                          f"(default: {','.join(DEFAULT_PIPELINE)})")
     args = ap.parse_args(argv)
     try:
-        config = CompilerConfig() if args.pipeline is None else \
-            CompilerConfig(pipeline=parse_pipeline_spec(args.pipeline))
+        config = hls.CompilerConfig() if args.pipeline is None else \
+            hls.CompilerConfig(pipeline=parse_pipeline_spec(args.pipeline))
     except ValueError as e:
         raise SystemExit(str(e))
 
-    # 2. compile: trace -> passes -> schedule, one entrypoint
-    driver = CompilerDriver(config)
-    design = driver.compile(build, name="conv2d_quickstart")
-    print(f"pass pipeline: {', '.join(design.config.pipeline) or '(none)'}")
-    print(f"raw DFG:      {len(design.graph_raw.ops):6d} ops "
-          f"(no loads/stores — forwarding is built in)")
-    print(f"optimised:    {len(design.graph_opt.ops):6d} ops  "
-          f"{design.graph_opt.op_histogram()}")
-    for rep in design.pass_reports:
-        if rep.ops_delta:
-            print(f"   pass {rep.summary()}")
-    print(f"schedule:     {design.makespan} intervals @10ns = "
-          f"{design.latency_us:.2f} us; resources "
-          f"{design.schedule.resources()}")
+    # 2. compile: trace -> passes -> schedule, one public entrypoint
+    design = hls.compile(build, name="conv2d_quickstart", config=config)
+    print(design.report())
 
-    # 3. behavioural verification incl. the FloPoCo (5,4) functional model
-    from repro.core import verify
-    feeds = verify.random_feeds(design.graph_opt, batch=4, seed=0)
-    ref = design.evaluate(feeds)
-    q54 = design.evaluate(feeds, fmt=FP_5_4)
+    # 3. one behavioural testbench covers it all (§3.2): optimised DFG and
+    # emitted SIMD design vs the interpreter reference, plus the FloPoCo
+    # (5,4) functional model
+    report = design.verify(batch=4, seed=0, fmt=FP_5_4)
+    print(report.summary())
     print(f"(5,4) max abs deviation vs fp32: "
-          f"{np.max(np.abs(ref['out'] - q54['out'])):.4f}")
-
-    # 4. emitted SIMD design (jittable) matches the functional model
-    import jax
-    fn = jax.jit(design.jax_fn())
-    got = np.asarray(fn(feeds)["out"])
-    np.testing.assert_allclose(got, ref["out"], rtol=1e-4, atol=1e-5)
+          f"{report.max_abs_err_quant:.4f}")
+    assert report.passed, "behavioural verification failed"
     print("emitted SIMD design matches the functional simulation  [OK]")
 
+    # 4. the deployable path: run a fresh batch through the jitted design
+    import jax
+    fn = jax.jit(design.jax_fn())
+    from repro.core import verify
+    feeds = verify.random_feeds(design.graph_opt, batch=4, seed=1)
+    got = np.asarray(fn(feeds)["out"])
+    print(f"served a batch of 4 through the SIMD design: out {got.shape}")
+
     # 5. a second compile of the same program is a cache hit
-    driver.compile(build, name="conv2d_quickstart")
-    print(f"design cache: {driver.cache.hits} hit(s), "
-          f"{driver.cache.misses} miss(es), hash "
-          f"{design.design_hash[:12]}")
+    hls.compile(build, name="conv2d_quickstart", config=config,
+                session=design.session)
+    stats = design.session.stats()
+    print(f"design cache: {stats['hits']} hit(s), "
+          f"{stats['misses']} miss(es), hash {design.design_hash[:12]}")
 
 
 if __name__ == "__main__":

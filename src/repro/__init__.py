@@ -1,8 +1,12 @@
 """repro: OpenHLS reproduced as a JAX/TPU framework.
 
 Subpackages:
+    hls         — THE public API: ``hls.compile(model) -> Design`` with
+                  run/verify/tune/serve/report, plus the nn -> loop-nest
+                  auto-lowering bridge
     core        — the paper's compiler (symbolic interpretation, passes,
-                  scheduling, precision, binding, verification)
+                  scheduling, precision, binding, verification); stable
+                  internal layer under ``repro.hls``
     nn          — model substrate (layers, attention, MoE, RG-LRU, xLSTM)
     models      — assembled models (CausalLM, BraggNN, encoder-decoder)
     kernels     — Pallas TPU kernels with jnp oracles

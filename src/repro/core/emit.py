@@ -263,10 +263,15 @@ def to_jax_fn(g: Graph) -> Callable[[dict[str, "np.ndarray"]], dict[str, "np.nda
     n_values = g.n_values
 
     def run(feeds: dict[str, jax.Array]) -> dict[str, jax.Array]:
-        example_name = next(iter(input_scatter))
-        rank = len(next(iter(g.inputs[example_name])))
-        ex_shape = jnp.shape(feeds[example_name])
-        batch = ex_shape[0] if len(ex_shape) == rank + 1 else 1
+        # batch = leading axis of the first *batched* feed (mirrors
+        # ``evaluate``): unbatched feeds — typically weights — broadcast
+        batch = 1
+        for name in input_scatter:
+            rank = len(next(iter(g.inputs[name])))
+            shp = jnp.shape(feeds[name])
+            if len(shp) == rank + 1:
+                batch = shp[0]
+                break
         buf = jnp.zeros((batch, n_values), dtype=jnp.float32)
         buf = buf.at[:, const_idx].set(const_val[None, :])
         for name, (vids, idxs) in input_scatter.items():

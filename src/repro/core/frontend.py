@@ -217,6 +217,67 @@ def copy_reshape(src: MemRef, dst: MemRef) -> None:
 # BraggNN (paper Listing 5, s=1 or 2) as a full scalar program
 # ---------------------------------------------------------------------------
 
+def non_local_block(ctx: Context, feat: MemRef, *, channels: int,
+                    mid_channels: int, prefix: str = "nlb",
+                    taylor_order: int = 8) -> MemRef:
+    """BraggNN's non-local attention block (paper Listing 5, NLB section).
+
+    feat: (1, channels, h, w) -> returns the residual output memref of the
+    same shape.  theta/phi/g are 1x1 convs to ``mid_channels``; attention
+    is softmax(theta^T phi) over the h*w spatial positions; the out conv
+    projects back to ``channels`` and a residual add closes the block.
+
+    ``prefix`` names the weight memrefs (``{prefix}.theta.weight`` ...) and
+    nest labels — shared by the hand-written :func:`braggnn` program and
+    the nn-module bridge (``repro.hls.bridge``), which therefore emit
+    bit-identical DFGs.
+    """
+    c1, c2 = channels, mid_channels
+    _, c_in, h1, w1 = feat.shape
+    assert c_in == c1 and h1 == w1, feat.shape
+    n_pos = h1 * h1
+
+    thetas = {}
+    for name in ("theta", "phi", "g"):
+        w = ctx.memref(f"{prefix}.{name}.weight", (c2, c1, 1, 1), "weight")
+        o = ctx.temp(f"{prefix}_{name}", (1, c2, h1, h1))
+        conv2d(ctx, feat, w, None, o, label=f"{prefix}.{name}_layer")
+        thetas[name] = o
+    theta, phi, g = thetas["theta"], thetas["phi"], thetas["g"]
+
+    # attention scores A[i, j] = sum_c theta[c, i] * phi[c, j]
+    scores = ctx.temp(f"{prefix}_scores", (n_pos, n_pos))
+    for (i, j) in ctx.parallel(n_pos, n_pos, label=f"{prefix}.scores"):
+        ih, iw = divmod(i, h1)
+        jh, jw = divmod(j, h1)
+        scores[i, j] = ctx.const(0.0)
+        for c in range(c2):
+            scores[i, j] = scores[i, j] + theta[0, c, ih, iw] * phi[0, c, jh, jw]
+
+    attn = ctx.temp(f"{prefix}_attn", (n_pos, n_pos))
+    soft_max(ctx, scores, attn, taylor_order=taylor_order,
+             label=f"{prefix}.soft")
+
+    # y[c, i] = sum_j A[i, j] * g[c, j]
+    y = ctx.temp(f"{prefix}_y", (1, c2, h1, h1))
+    for (c, i) in ctx.parallel(c2, n_pos, label=f"{prefix}.aggregate"):
+        ih, iw = divmod(i, h1)
+        y[0, c, ih, iw] = ctx.const(0.0)
+        for j in range(n_pos):
+            jh, jw = divmod(j, h1)
+            y[0, c, ih, iw] = y[0, c, ih, iw] + attn[i, j] * g[0, c, jh, jw]
+
+    # out_cnn (1x1, c2 -> c1) + residual
+    w_out = ctx.memref(f"{prefix}.out_cnn.weight", (c1, c2, 1, 1), "weight")
+    z = ctx.temp(f"{prefix}_z", (1, c1, h1, h1))
+    conv2d(ctx, y, w_out, None, z, label=f"{prefix}.out_cnn")
+    nlb_out = ctx.temp(f"{prefix}_out", (1, c1, h1, h1))
+    for (i1, i2, i3, i4) in ctx.parallel(1, c1, h1, h1,
+                                         label=f"{prefix}.residual"):
+        nlb_out[i1, i2, i3, i4] = z[i1, i2, i3, i4] + feat[i1, i2, i3, i4]
+    return nlb_out
+
+
 def braggnn(ctx: Context, *, s: int = 1, img: int = 11,
             taylor_order: int = 8) -> None:
     """Build the complete BraggNN(s) DFG on an (1, 1, img, img) input patch.
@@ -231,7 +292,6 @@ def braggnn(ctx: Context, *, s: int = 1, img: int = 11,
     """
     c1, c2 = 16 * s, 8 * s
     h1 = img - 2                      # conv1 output spatial (valid, k=3)
-    n_pos = h1 * h1                   # NLB spatial positions (81 for img=11)
 
     x = ctx.memref("input", (1, 1, img, img), "input")
 
@@ -242,42 +302,8 @@ def braggnn(ctx: Context, *, s: int = 1, img: int = 11,
     conv2d(ctx, x, w_conv1, b_conv1, feat, label="cnn_layers_1")
 
     # --- NLB ----------------------------------------------------------------
-    thetas = {}
-    for name in ("theta", "phi", "g"):
-        w = ctx.memref(f"nlb.{name}.weight", (c2, c1, 1, 1), "weight")
-        o = ctx.temp(f"nlb_{name}", (1, c2, h1, h1))
-        conv2d(ctx, feat, w, None, o, label=f"nlb.{name}_layer")
-        thetas[name] = o
-    theta, phi, g = thetas["theta"], thetas["phi"], thetas["g"]
-
-    # attention scores A[i, j] = sum_c theta[c, i] * phi[c, j]
-    scores = ctx.temp("nlb_scores", (n_pos, n_pos))
-    for (i, j) in ctx.parallel(n_pos, n_pos, label="nlb.scores"):
-        ih, iw = divmod(i, h1)
-        jh, jw = divmod(j, h1)
-        scores[i, j] = ctx.const(0.0)
-        for c in range(c2):
-            scores[i, j] = scores[i, j] + theta[0, c, ih, iw] * phi[0, c, jh, jw]
-
-    attn = ctx.temp("nlb_attn", (n_pos, n_pos))
-    soft_max(ctx, scores, attn, taylor_order=taylor_order, label="nlb.soft")
-
-    # y[c, i] = sum_j A[i, j] * g[c, j]
-    y = ctx.temp("nlb_y", (1, c2, h1, h1))
-    for (c, i) in ctx.parallel(c2, n_pos, label="nlb.aggregate"):
-        ih, iw = divmod(i, h1)
-        y[0, c, ih, iw] = ctx.const(0.0)
-        for j in range(n_pos):
-            jh, jw = divmod(j, h1)
-            y[0, c, ih, iw] = y[0, c, ih, iw] + attn[i, j] * g[0, c, jh, jw]
-
-    # out_cnn (1x1, c2 -> c1) + residual
-    w_out = ctx.memref("nlb.out_cnn.weight", (c1, c2, 1, 1), "weight")
-    z = ctx.temp("nlb_z", (1, c1, h1, h1))
-    conv2d(ctx, y, w_out, None, z, label="nlb.out_cnn")
-    nlb_out = ctx.temp("nlb_out", (1, c1, h1, h1))
-    for (i1, i2, i3, i4) in ctx.parallel(1, c1, h1, h1, label="nlb.residual"):
-        nlb_out[i1, i2, i3, i4] = z[i1, i2, i3, i4] + feat[i1, i2, i3, i4]
+    nlb_out = non_local_block(ctx, feat, channels=c1, mid_channels=c2,
+                              taylor_order=taylor_order)
 
     # --- cnn_layers_2 -------------------------------------------------------
     r0 = ctx.temp("cnn2_relu0", (1, c1, h1, h1))

@@ -647,20 +647,40 @@ class CompilerDriver:
         return design
 
 
-#: Process-wide default driver — the convenience entrypoint for examples
-#: and serving.  Benchmarks that measure compile time should instantiate
-#: their own driver (or clear this one's cache).
-_default_driver: Optional[CompilerDriver] = None
+# ---------------------------------------------------------------------------
+# Deprecated entry points (forward to repro.hls, the public front door)
+# ---------------------------------------------------------------------------
+
+#: shims that already warned this process (each warns exactly once)
+_DEPRECATION_WARNED: set[str] = set()
+
+
+def _warn_deprecated(key: str, msg: str) -> None:
+    if key in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(key)
+    import warnings
+    warnings.warn(msg, DeprecationWarning, stacklevel=3)
 
 
 def default_driver() -> CompilerDriver:
-    global _default_driver
-    if _default_driver is None:
-        _default_driver = CompilerDriver()
-    return _default_driver
+    """Deprecated: use ``repro.hls`` (``hls.compile`` / ``hls.Session``)."""
+    _warn_deprecated(
+        "default_driver",
+        "repro.core.pipeline.default_driver() is deprecated; use "
+        "repro.hls.compile(...) or an explicit repro.hls.Session")
+    from repro import hls
+    return hls._default_session().driver
 
 
 def compile(program: Union[BuildFn, Graph], *, name: str = "design",
             config: Optional[CompilerConfig] = None) -> CompiledDesign:
-    """Module-level convenience: ``pipeline.compile(build_fn)``."""
-    return default_driver().compile(program, name=name, config=config)
+    """Deprecated: use ``repro.hls.compile`` (returns a rich ``Design``;
+    its ``.compiled`` is this function's historical return value)."""
+    _warn_deprecated(
+        "pipeline.compile",
+        "repro.core.pipeline.compile() is deprecated; use "
+        "repro.hls.compile(...) — the returned Design wraps the same "
+        "CompiledDesign (design.compiled)")
+    from repro import hls
+    return hls.compile(program, name=name, config=config).compiled

@@ -1,0 +1,560 @@
+"""``repro.hls`` implementation: ``compile() -> Design`` and ``Session``.
+
+The hls4ml-shaped front door (``convert(model) -> hls_model`` with
+``.predict()/.build()``): one ``compile`` call accepts a jax-level
+``ModuleGraph`` (auto-lowered through :mod:`repro.hls.bridge`), a
+hand-written loop-nest build function, or an already-traced ``Graph``, and
+returns a rich :class:`Design` handle over the internal
+``CompiledDesign`` artifact — run, verify, tune, serve, report, all from
+one object.  ``repro.core`` remains the stable internal layer underneath;
+nothing here re-implements the flow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Iterable, Optional, Union
+
+import numpy as np
+
+from repro.core.cachedir import cache_root
+from repro.core.ir import Graph
+from repro.core.interp import Context
+from repro.core.pipeline import (CompiledDesign, CompilerConfig,
+                                 CompilerDriver, DesignCache,
+                                 graph_fingerprint)
+from repro.hls import bridge
+from repro.nn.graph import ModuleGraph
+
+#: What ``compile`` accepts: a jax-level module graph, a loop-nest build
+#: callable (``Context -> None``), or an already-traced DFG.
+Model = Union[ModuleGraph, Callable[[Context], None], Graph]
+
+
+def _as_program(model: Model):
+    """-> (program for the driver, ModuleGraph or None)."""
+    if isinstance(model, ModuleGraph):
+        return bridge.build_fn(model), model
+    if isinstance(model, Graph) or callable(model):
+        return model, None
+    raise TypeError(
+        f"hls.compile expects a ModuleGraph, a build callable "
+        f"(Context -> None) or a traced Graph, got {type(model).__name__}")
+
+
+def _default_name(model: Model, module: Optional[ModuleGraph]) -> str:
+    if module is not None:
+        return module.name
+    if isinstance(model, Graph):
+        return "design"
+    return getattr(model, "__name__", "design").replace("<lambda>", "design")
+
+
+# ---------------------------------------------------------------------------
+# Serving report
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Throughput accounting for one :meth:`Design.serve` run."""
+
+    backend: str
+    fmt: Optional[str]
+    batches: int = 0
+    samples: int = 0
+    wall_s: float = 0.0
+    warmup_s: float = 0.0
+    #: per-batch outputs, only kept when ``collect=True``
+    outputs: Optional[list] = None
+
+    @property
+    def us_per_sample(self) -> float:
+        return self.wall_s / self.samples * 1e6 if self.samples else 0.0
+
+    def summary(self) -> str:
+        fmt = "fp32" if self.fmt in (None, "fp32") else \
+            f"({self.fmt.replace('_', ',')})"
+        return (f"served {self.samples} samples in {self.batches} batches: "
+                f"{self.us_per_sample:.2f} us/sample "
+                f"[{self.backend} backend, {fmt}; "
+                f"warm-up {self.warmup_s:.2f}s]")
+
+
+# ---------------------------------------------------------------------------
+# The Design handle
+# ---------------------------------------------------------------------------
+
+
+class Design:
+    """A compiled design plus everything you do with one.
+
+    Wraps the internal ``CompiledDesign`` artifact (available as
+    ``.compiled``; its fields — ``graph_raw``, ``graph_opt``,
+    ``schedule``, ``timings``, ``pass_reports``, ``design_hash``, ... —
+    are delegated, so ``design.makespan`` etc. work directly) and keeps
+    the session, source program and module-graph context needed for the
+    verbs: :meth:`run`, :meth:`jax_fn`, :meth:`verify`, :meth:`tune`,
+    :meth:`apply_tuned`, :meth:`with_config`, :meth:`serve`,
+    :meth:`report`.
+    """
+
+    def __init__(self, compiled: CompiledDesign, session: "Session", *,
+                 program=None, module: Optional[ModuleGraph] = None,
+                 example_inputs=None,
+                 tuned_candidate=None):
+        self._compiled = compiled
+        self._session = session
+        self._program = program
+        self._module = module
+        self._tuned_candidate = tuned_candidate
+        self.example_inputs = example_inputs
+        if example_inputs is not None:           # early shape validation
+            if isinstance(example_inputs, dict):
+                unknown = set(example_inputs) - set(compiled.graph_raw.inputs)
+                if unknown:
+                    raise ValueError(
+                        f"example_inputs name unknown memrefs {sorted(unknown)}; "
+                        f"graph inputs: {sorted(compiled.graph_raw.inputs)}")
+            else:
+                self._coerce_input(example_inputs)
+
+    # -- delegation ---------------------------------------------------------
+
+    @property
+    def compiled(self) -> CompiledDesign:
+        """The underlying ``CompiledDesign`` (stable internal artifact)."""
+        return self._compiled
+
+    @property
+    def session(self) -> "Session":
+        return self._session
+
+    @property
+    def module(self) -> Optional[ModuleGraph]:
+        return self._module
+
+    @property
+    def tuned_candidate(self):
+        """The ``Candidate`` this design was tuned to, if any."""
+        return self._tuned_candidate
+
+    @property
+    def precision(self) -> Optional[str]:
+        """FloPoCo format key carried by the tuned candidate (None=fp32)."""
+        if self._tuned_candidate is None:
+            return None
+        fmt = self._tuned_candidate.get("precision")
+        return None if fmt in (None, "fp32") else fmt
+
+    @property
+    def fingerprint(self) -> str:
+        """Content hash of the traced DFG (the tuning/cache identity)."""
+        return graph_fingerprint(self._compiled.graph_raw)
+
+    def __getattr__(self, name: str):
+        # everything else (makespan, schedule, timings, partition, ...) is
+        # the artifact's business — delegate rather than mirror
+        try:
+            compiled = self.__dict__["_compiled"]
+        except KeyError:
+            raise AttributeError(name) from None
+        return getattr(compiled, name)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"Design({self._compiled.summary()})"
+
+    # -- feeds --------------------------------------------------------------
+
+    def _input_memref(self) -> tuple[str, tuple[int, ...]]:
+        if self._module is not None:
+            return self._module.input_name, self._module.input_shape
+        g = self._compiled.graph_raw
+        data = [n for n in g.inputs if n not in g.weight_names]
+        if len(data) != 1:
+            raise ValueError(
+                f"cannot infer the input memref (non-weight inputs: {data}) "
+                f"— pass a feed dict instead of a bare array")
+        from repro.core.verify import input_shapes
+        return data[0], input_shapes(g)[data[0]]
+
+    def _coerce_input(self, x) -> dict[str, np.ndarray]:
+        name, shape = self._input_memref()
+        arr = np.asarray(x, dtype=np.float32)
+        if arr.shape == tuple(shape) or arr.shape[1:] == tuple(shape):
+            return {name: arr}
+        if shape[0] == 1 and arr.shape[1:] == tuple(shape)[1:]:
+            # natural batch (B, *shape[1:]) -> (B,) + shape
+            return {name: arr[:, None]}
+        raise ValueError(
+            f"input shape {arr.shape} does not match memref {name!r} "
+            f"shape {tuple(shape)} (optionally with a leading batch axis)")
+
+    def _batch_size(self, x) -> int:
+        """Samples in one batch (a bare array or a feed dict)."""
+        name, shape = self._input_memref()
+        if isinstance(x, dict):
+            if name not in x:
+                return 1
+            x = x[name]
+            arr = np.asarray(x)
+            return int(arr.shape[0]) if arr.ndim == len(shape) + 1 else 1
+        arr = np.asarray(x)
+        if arr.shape == tuple(shape):
+            return 1
+        return int(arr.shape[0])
+
+    def feeds(self, inputs=None) -> dict[str, np.ndarray]:
+        """A full feed dict: ``inputs`` (array or partial dict, or the
+        ``example_inputs`` given at compile time) merged with the bound
+        module weights."""
+        if inputs is None:
+            inputs = self.example_inputs
+        if inputs is None:
+            raise ValueError("no inputs given and no example_inputs bound")
+        feeds = dict(inputs) if isinstance(inputs, dict) \
+            else self._coerce_input(inputs)
+        if self._module is not None:
+            for k, v in self._module.weight_feeds().items():
+                feeds.setdefault(k, v)
+        return feeds
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self, inputs=None, *, fmt=None, raw: bool = False
+            ) -> dict[str, np.ndarray]:
+        """Vectorised functional simulation of the design.
+
+        ``inputs``: a feed dict, a bare (optionally batched) input array,
+        or None to use ``example_inputs``.  Module weights bound at build
+        time are fed automatically.  ``fmt`` quantises through the FloPoCo
+        functional model; ``raw=True`` evaluates the unoptimised DFG.
+        """
+        return self._compiled.evaluate(self.feeds(inputs), fmt=fmt, raw=raw)
+
+    def jax_fn(self) -> Callable:
+        """The emitted SIMD design (jittable)."""
+        return self._compiled.jax_fn()
+
+    # -- verification -------------------------------------------------------
+
+    def verify(self, *, ref_fn=None, batch: int = 4, seed: int = 0,
+               scale: float = 1.0, fmt=None, atol: float = 1e-3,
+               ref_atol: float = 5e-2, **kw):
+        """Behavioural testbench vs the interpreter reference (paper §3.2).
+
+        Random vectors through the raw DFG, the optimised DFG, the
+        emitted SIMD design, and (with ``fmt``) the FloPoCo functional
+        model; returns a ``TestbenchReport`` whose ``passed`` folds the
+        tolerances.  ``ref_fn`` optionally adds an independent
+        tensor-level reference.
+        """
+        from repro.core.verify import run_testbench
+        return run_testbench(self.name, design=self._compiled, ref_fn=ref_fn,
+                             batch=batch, seed=seed, scale=scale, fmt=fmt,
+                             atol=atol, ref_atol=ref_atol, **kw)
+
+    # -- reconfiguration ----------------------------------------------------
+
+    def with_config(self, config: CompilerConfig, *,
+                    name: Optional[str] = None) -> "Design":
+        """Recompile under a different config, sharing the traced graph
+        (and the session's pass-stage memo) whenever the trace mode
+        (``config.forward``) allows it."""
+        if config.forward != self._compiled.config.forward:
+            if self._program is None or isinstance(self._program, Graph):
+                raise ValueError(
+                    "config.forward differs from this design's trace mode "
+                    "and no build program is available to re-trace")
+            program = self._program          # re-trace in the other mode
+        else:
+            program = self._compiled.graph_raw
+        compiled = self._session.driver.compile(
+            program, name=name or self.name, config=config)
+        return Design(compiled, self._session, program=self._program,
+                      module=self._module,
+                      example_inputs=self.example_inputs)
+
+    # -- tuning -------------------------------------------------------------
+
+    def tune(self, space, *, strategy: str = "hillclimb", budget: int = 8,
+             db=None, dry: bool = True, force: bool = False,
+             target_us: Optional[float] = None, on_trial=None,
+             batch: int = 2, seed: int = 0, scale: float = 0.4,
+             tol_abs: float = 1e-3, tol_rel: float = 5e-2,
+             measure_reps: int = 5):
+        """Search ``space`` over this design (delegates to ``repro.tune``).
+
+        Results auto-persist to the ``TuningDB`` (the shared versioned
+        cache root unless ``db`` overrides) keyed by this design's
+        fingerprint; a covered rerun is served from the DB without
+        searching.  Candidates compile through this design's session, so
+        they share the trace, the design cache and the pass-stage memo.
+        Returns a ``TuneResult``; apply the win with :meth:`apply_tuned`.
+        """
+        from repro.tune import Evaluator, Tuner, TuningDB
+        from repro.tune.strategies import Bisection, make_strategy
+        db = db if db is not None else TuningDB()
+        if space.base.forward == self._compiled.config.forward:
+            program = self._compiled.graph_raw
+        elif self._program is not None and not isinstance(self._program,
+                                                          Graph):
+            program = self._program
+        else:
+            raise ValueError(
+                "space.base.forward differs from this design's trace mode "
+                "and no build program is available to re-trace")
+        evaluator = Evaluator(program, space, driver=self._session.driver,
+                              name=self.name, batch=batch, seed=seed,
+                              scale=scale, tol_abs=tol_abs, tol_rel=tol_rel,
+                              measure=not dry, measure_reps=measure_reps)
+        strat = (Bisection(target_us=target_us) if strategy == "bisect"
+                 else make_strategy(strategy)) if isinstance(strategy, str) \
+            else strategy
+        tuner = Tuner(evaluator, strat, db=db, budget=budget,
+                      on_trial=on_trial)
+        return tuner.run(force=force)
+
+    def apply_tuned(self, space, *, db=None, verbose: bool = True
+                    ) -> tuple["Design", Optional[Any]]:
+        """Auto-load the best tuned config for this design from the DB.
+
+        Returns ``(tuned design, candidate)`` on a hit; on a miss returns
+        ``(self, None)`` and — no silent fallback — says exactly which DB
+        path was probed and how to populate it.
+        """
+        from repro.tune import TuningDB, best_config_for
+        db = db if db is not None else TuningDB()
+        hit = best_config_for(self._compiled.graph_raw, space, db=db)
+        if hit is None:
+            if verbose:
+                print(f"no tuned config for design {self.fingerprint[:12]} "
+                      f"/ space {space.name!r}: probed TuningDB {db.path} "
+                      f"(cache root {db.path.parent}) — run "
+                      f"`python -m repro.tune` or design.tune(space) first; "
+                      f"keeping the current config")
+            return self, None
+        config, candidate = hit
+        design = self.with_config(config)
+        design._tuned_candidate = candidate
+        return design, candidate
+
+    # -- serving ------------------------------------------------------------
+
+    def serve(self, batch_iter: Iterable, *, fmt: Optional[str] = None,
+              backend: Optional[str] = None, collect: bool = False,
+              on_batch=None) -> ServeReport:
+        """The warmed batched serving loop.
+
+        ``backend='tensor'`` jits the module's fused tensor-level forward
+        (requires a bound ``ModuleGraph`` with a ``forward_fn``) at FloPoCo
+        format key ``fmt``; ``backend='simd'`` jits the emitted SIMD design
+        (fp32).  Default: tensor when available, else simd.  The first
+        batch warms the jit (timed separately); every batch is then
+        blocked-on individually, server-style.  ``on_batch(i, out)`` is
+        called per batch; ``collect=True`` additionally keeps outputs.
+        """
+        import jax
+        if backend is None:
+            backend = ("tensor" if self._module is not None
+                       and self._module.forward_fn is not None
+                       and self._module.params is not None else "simd")
+        if backend == "tensor":
+            if (self._module is None or self._module.forward_fn is None
+                    or self._module.params is None):
+                raise ValueError("tensor backend needs a ModuleGraph with "
+                                 "bound params and a forward_fn")
+            params = self._module.params
+            fwd = self._module.forward_fn
+            fn = jax.jit(lambda p, x: fwd(p, x, fmt=fmt))
+            run_one = lambda x: fn(params, x)
+        elif backend == "simd":
+            if fmt not in (None, "fp32"):
+                raise ValueError("the emitted SIMD design runs fp32; use "
+                                 "backend='tensor' for quantised serving")
+            jfn = jax.jit(self._compiled.jax_fn())
+            # feeds() accepts bare input arrays or (partial) feed dicts and
+            # merges any bound module weights
+            run_one = lambda x: jfn(self.feeds(x))
+        else:
+            raise ValueError(f"unknown backend {backend!r} "
+                             f"(expected 'tensor' or 'simd')")
+
+        report = ServeReport(backend=backend, fmt=fmt,
+                             outputs=[] if collect else None)
+        it = iter(batch_iter)
+        try:
+            first = next(it)
+        except StopIteration:
+            return report
+        t0 = time.perf_counter()
+        jax.block_until_ready(run_one(first))        # compile + warm
+        report.warmup_s = time.perf_counter() - t0
+
+        import itertools
+        for i, x in enumerate(itertools.chain((first,), it)):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(run_one(x))
+            report.wall_s += time.perf_counter() - t0
+            report.batches += 1
+            report.samples += self._batch_size(x)
+            if on_batch is not None:
+                on_batch(i, out)
+            if collect:
+                report.outputs.append(out)
+        return report
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self) -> str:
+        """Pass / schedule / latency summary of the whole artifact."""
+        d = self._compiled
+        res = d.schedule.resources()
+        lines = [d.summary()]
+        lines.append(
+            f"  pipeline : {', '.join(d.config.pipeline) or '(none)'}")
+        for rep in d.pass_reports:
+            if rep.ops_delta:
+                lines.append(f"    {rep.summary()}")
+        skipped = sum(1 for r in d.pass_reports if r.skipped)
+        if skipped:
+            lines.append(f"    ({skipped} pass applications skipped by the "
+                         f"incremental fixpoint)")
+        stage = (f"{d.config.n_stages}-stage pipeline, II={d.stage_ii}"
+                 if d.stage_ii is not None else "unpipelined")
+        lines.append(f"  schedule : {d.makespan} intervals "
+                     f"({d.latency_us:.2f} us end-to-end), {stage} -> "
+                     f"{d.sample_latency_us:.2f} us/sample")
+        lines.append(f"  resources: {res}")
+        t = d.timings
+        lines.append(f"  compile  : {t.get('total_s', 0.0):.2f}s "
+                     f"(trace {t.get('trace_s', 0.0):.2f} / passes "
+                     f"{t.get('passes_s', 0.0):.2f} / schedule "
+                     f"{t.get('schedule_s', 0.0):.2f})")
+        if self._tuned_candidate is not None:
+            lines.append(f"  tuned    : {self._tuned_candidate.label()}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Sessions + the module-level front door
+# ---------------------------------------------------------------------------
+
+
+class Session:
+    """One compiler instance: config + design cache + pass-stage memo.
+
+    Every ``Design`` remembers its session, so recompiles
+    (:meth:`Design.with_config`) and tuning runs share the trace and the
+    caches.  The module-level :func:`compile` uses a process default; make
+    your own for benchmark isolation (``max_memory_entries``) or a private
+    on-disk cache (``cache_dir``).
+    """
+
+    def __init__(self, *, config: Optional[CompilerConfig] = None,
+                 cache_dir: Optional[Union[str, Path]] = None,
+                 max_memory_entries: Optional[int] = None):
+        self.driver = CompilerDriver(
+            config, cache=DesignCache(cache_dir,
+                                      max_memory_entries=max_memory_entries))
+
+    def compile(self, model: Model, *, name: Optional[str] = None,
+                config: Optional[CompilerConfig] = None,
+                example_inputs=None, tuned=None, db=None) -> Design:
+        program, module = _as_program(model)
+        to_compile: Union[Graph, Callable] = program
+        candidate = None
+        if tuned is not None:
+            # resolve the tuned config BEFORE the (only) compile: trace,
+            # probe the TuningDB by fingerprint, then lower once.  ``tuned``
+            # is a SearchSpace; a miss keeps ``config`` and says which DB
+            # path was probed (never a silent fallback).
+            from repro.tune import TuningDB, best_config_for
+            db = db if db is not None else TuningDB()
+            cfg_fwd = (config or self.driver.config).forward
+            if not isinstance(to_compile, Graph):
+                to_compile = self.driver.trace(program, forward=cfg_fwd)
+            hit = best_config_for(to_compile, tuned, db=db)
+            if hit is not None:
+                config, candidate = hit
+                if config.forward != cfg_fwd:
+                    if isinstance(program, Graph):
+                        raise ValueError(
+                            "tuned config.forward differs from the given "
+                            "graph's trace mode; pass a build callable")
+                    to_compile = self.driver.trace(program,
+                                                   forward=config.forward)
+            else:
+                from repro.core.pipeline import graph_fingerprint
+                print(f"no tuned config for design "
+                      f"{graph_fingerprint(to_compile)[:12]} / space "
+                      f"{tuned.name!r}: probed TuningDB {db.path} — run "
+                      f"`python -m repro.tune` or design.tune(space) "
+                      f"first; compiling the given config")
+        compiled = self.driver.compile(
+            to_compile, name=name or _default_name(model, module),
+            config=config)
+        return Design(compiled, self, program=program, module=module,
+                      example_inputs=example_inputs,
+                      tuned_candidate=candidate)
+
+    def stats(self) -> dict[str, int]:
+        """Design-cache hit/miss counters (serving warm-path telemetry)."""
+        return {"hits": self.driver.cache.hits,
+                "misses": self.driver.cache.misses}
+
+
+#: process-default sessions, one per cache location ("" = memory-only)
+_sessions: dict[str, Session] = {}
+
+
+def _default_session(cache: Union[bool, str, Path, None] = False) -> Session:
+    if cache is True:
+        cache_dir: Optional[Path] = cache_root("designs")
+    elif cache:
+        cache_dir = Path(cache)
+    else:
+        cache_dir = None
+    key = str(cache_dir or "")
+    if key not in _sessions:
+        _sessions[key] = Session(cache_dir=cache_dir)
+    return _sessions[key]
+
+
+def compile(model: Model, *, name: Optional[str] = None,
+            config: Optional[CompilerConfig] = None, example_inputs=None,
+            cache: Union[bool, str, Path, None] = False,
+            session: Optional[Session] = None, tuned=None,
+            db=None) -> Design:
+    """Compile a model to a deployable :class:`Design` (the front door).
+
+    ``model`` is a :class:`~repro.nn.graph.ModuleGraph` (auto-lowered to
+    loop nests through the bridge), a hand-written build callable
+    (``Context -> None``) or an already-traced ``Graph``.
+    ``example_inputs`` optionally binds (and shape-checks) a default input
+    batch for :meth:`Design.run`.  ``cache=True`` persists designs under
+    the shared versioned cache root (``cache=<path>`` under a private
+    one); repeated compiles are then served from disk across processes.
+    ``tuned`` (a ``SearchSpace``) resolves the best known config from the
+    ``TuningDB`` (``db`` overrides the shared one) before the single
+    compile — a miss prints the probed DB path and keeps ``config``.
+    """
+    s = session if session is not None else _default_session(cache)
+    return s.compile(model, name=name, config=config,
+                     example_inputs=example_inputs, tuned=tuned, db=db)
+
+
+def trace(model: Model, *, forward: bool = True) -> Graph:
+    """Just the trace: symbolically interpret ``model`` into its DFG.
+
+    The cheap way to a ``graph_fingerprint`` (design identity for cache /
+    TuningDB probes) without running passes or the scheduler.
+    """
+    program, _ = _as_program(model)
+    if isinstance(program, Graph):
+        return program
+    ctx = Context(forward=forward)
+    program(ctx)
+    return ctx.finalize()

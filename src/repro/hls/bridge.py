@@ -1,0 +1,147 @@
+"""The nn -> loop-nest auto-lowering bridge (the headline of ``repro.hls``).
+
+Walks a :class:`repro.nn.graph.ModuleGraph` and emits the corresponding
+``repro.core.frontend`` loop nests under a symbolic-interpretation
+``Context`` — the missing link between "model described once, at the
+tensor level" and the paper's scalar loop-nest programs.  Every node type
+lowers through the *same* frontend function the hand-written programs use
+(``conv2d``, ``linear``, ``non_local_block``, ...), so a module graph whose
+names pin the hand-written memref/label scheme produces a bit-identical
+DFG: ``hls.compile(models.braggnn.build(s))`` and the hand-written
+``frontend.braggnn`` share one ``graph_fingerprint`` (proved by
+``tests/test_hls_bridge.py``), and therefore one design-cache and
+``TuningDB`` identity — tuning wins found on either path serve both.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.core import frontend
+from repro.core.interp import Context, MemRef
+from repro.nn.graph import (BatchNorm2d, Conv2d, Flatten, Linear, MaxPool2d,
+                            ModuleGraph, NonLocalBlock, OutputReLU, ReLU,
+                            Softmax)
+
+
+def _emit_conv2d(ctx: Context, node: Conv2d, cur: MemRef,
+                 shape: tuple, kind: str) -> MemRef:
+    w = ctx.memref(f"{node.prefix}.weight",
+                   (node.out_channels, node.in_channels, node.kernel,
+                    node.kernel), "weight")
+    b = ctx.memref(f"{node.prefix}.bias", (node.out_channels,), "weight") \
+        if node.bias else None
+    out = ctx.memref(node.out_name, node.out_shape(shape), kind)
+    frontend.conv2d(ctx, cur, w, b, out, stride=node.stride,
+                    padding=node.padding, label=node.label)
+    return out
+
+
+def _emit_linear(ctx: Context, node: Linear, cur: MemRef,
+                 shape: tuple, kind: str) -> MemRef:
+    w = ctx.memref(f"{node.prefix}.weight",
+                   (node.out_features, node.in_features), "weight")
+    b = ctx.memref(f"{node.prefix}.bias", (node.out_features,), "weight") \
+        if node.bias else None
+    out = ctx.memref(node.out_name, node.out_shape(shape), kind)
+    frontend.linear(ctx, cur, w, b, out, label=node.label)
+    return out
+
+
+def _emit_batch_norm(ctx: Context, node: BatchNorm2d, cur: MemRef,
+                     shape: tuple, kind: str) -> MemRef:
+    mems = {leaf: ctx.memref(f"{node.prefix}.{leaf}", (node.channels,),
+                             "weight")
+            for leaf in ("gamma", "beta", "mean", "var")}
+    out = ctx.memref(node.out_name, node.out_shape(shape), kind)
+    frontend.batch_norm_2d(ctx, cur, mems["gamma"], mems["beta"],
+                           mems["mean"], mems["var"], out, eps=node.eps,
+                           label=node.label)
+    return out
+
+
+def _emit_relu(ctx: Context, node: ReLU, cur: MemRef,
+               shape: tuple, kind: str) -> MemRef:
+    out = ctx.memref(node.out_name, node.out_shape(shape), kind)
+    frontend.relu_layer(ctx, cur, out, label=node.label)
+    return out
+
+
+def _emit_output_relu(ctx: Context, node: OutputReLU, cur: MemRef,
+                      shape: tuple, kind: str) -> MemRef:
+    # in-place: rewrite the previous node's (output) symbol table, one
+    # sequential nest per element — frontend.braggnn's final-ReLU form
+    for idx in list(cur.table.keys()):
+        with ctx.sequential(label=node.label):
+            cur.table[idx] = ctx.relu(cur.table[idx])
+    return cur
+
+
+def _emit_max_pool(ctx: Context, node: MaxPool2d, cur: MemRef,
+                   shape: tuple, kind: str) -> MemRef:
+    out = ctx.memref(node.out_name, node.out_shape(shape), kind)
+    frontend.max_pool_2d(ctx, cur, out, k=node.kernel, stride=node.stride,
+                         label=node.label)
+    return out
+
+
+def _emit_softmax(ctx: Context, node: Softmax, cur: MemRef,
+                  shape: tuple, kind: str) -> MemRef:
+    out = ctx.memref(node.out_name, node.out_shape(shape), kind)
+    frontend.soft_max(ctx, cur, out, taylor_order=node.taylor_order,
+                      label=node.label)
+    return out
+
+
+def _emit_nlb(ctx: Context, node: NonLocalBlock, cur: MemRef,
+              shape: tuple, kind: str) -> MemRef:
+    if kind == "output":
+        raise ValueError("NonLocalBlock cannot be the output node")
+    return frontend.non_local_block(
+        ctx, cur, channels=node.channels, mid_channels=node.mid_channels,
+        prefix=node.prefix, taylor_order=node.taylor_order)
+
+
+def _emit_flatten(ctx: Context, node: Flatten, cur: MemRef,
+                  shape: tuple, kind: str) -> MemRef:
+    out = ctx.memref(node.out_name, node.out_shape(shape), kind)
+    frontend.copy_reshape(cur, out)
+    return out
+
+
+_EMITTERS: dict[type, Callable] = {
+    Conv2d: _emit_conv2d,
+    Linear: _emit_linear,
+    BatchNorm2d: _emit_batch_norm,
+    ReLU: _emit_relu,
+    OutputReLU: _emit_output_relu,
+    MaxPool2d: _emit_max_pool,
+    Softmax: _emit_softmax,
+    NonLocalBlock: _emit_nlb,
+    Flatten: _emit_flatten,
+}
+
+
+def emit_module(ctx: Context, module: ModuleGraph) -> MemRef:
+    """Lower ``module`` to loop nests under ``ctx``; returns the output
+    memref.  The *last memref-allocating* node writes an ``output``-kind
+    memref (an ``OutputReLU`` tail rewrites it in place)."""
+    shapes = module.shapes()
+    last_alloc = max(i for i, n in enumerate(module.nodes)
+                    if not isinstance(n, OutputReLU))
+    cur = ctx.memref(module.input_name, module.input_shape, "input")
+    shape = module.input_shape
+    for i, node in enumerate(module.nodes):
+        kind = "output" if i == last_alloc else "temp"
+        cur = _EMITTERS[type(node)](ctx, node, cur, shape, kind)
+        shape = shapes[i]
+    return cur
+
+
+def build_fn(module: ModuleGraph) -> Callable[[Context], None]:
+    """The ``Context -> None`` build callable the ``CompilerDriver`` traces —
+    ``hls.compile`` uses this to accept a ``ModuleGraph`` anywhere a
+    hand-written build function is accepted."""
+    def build(ctx: Context) -> None:
+        emit_module(ctx, module)
+    return build

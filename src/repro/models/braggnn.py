@@ -19,36 +19,60 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.precision import FORMATS, quantize
-from repro.nn.module import ParamSpec
+from repro.nn import graph as nng
 
 ACCUM = jnp.float32
 
 
-def specs(s: int = 1, img: int = 11) -> dict:
+def build(s: int = 1, img: int = 11, *, params=None,
+          taylor_order: int = 8) -> nng.ModuleGraph:
+    """BraggNN(s) as a declarative :class:`~repro.nn.graph.ModuleGraph`.
+
+    The single-source model description: ``.specs()`` is the training
+    param tree, and ``repro.hls.compile(build(...))`` auto-lowers it to
+    the loop-nest DFG via the bridge.  Node names/prefixes/labels pin the
+    hand-written ``frontend.braggnn`` memref scheme, so the bridged DFG is
+    bit-identical (same ``graph_fingerprint``) to the hand-written one.
+    ``params`` optionally binds a trained param tree for serving.
+    """
     c1, c2 = 16 * s, 8 * s
     h3 = img - 6
     n_flat = 2 * s * h3 * h3
     dims = [n_flat, 16 * s, 8 * s, 4 * s, 2]
-    d = {
-        "conv1": {"w": ParamSpec((c1, 1, 3, 3), (None, None, None, None)),
-                  "b": ParamSpec((c1,), (None,), init="zeros")},
-        "nlb": {
-            "theta": {"w": ParamSpec((c2, c1, 1, 1), (None,) * 4)},
-            "phi": {"w": ParamSpec((c2, c1, 1, 1), (None,) * 4)},
-            "g": {"w": ParamSpec((c2, c1, 1, 1), (None,) * 4)},
-            "out": {"w": ParamSpec((c1, c2, 1, 1), (None,) * 4)},
-        },
-        "conv2a": {"w": ParamSpec((c2, c1, 3, 3), (None,) * 4),
-                   "b": ParamSpec((c2,), (None,), init="zeros")},
-        "conv2b": {"w": ParamSpec((2 * s, c2, 3, 3), (None,) * 4),
-                   "b": ParamSpec((2 * s,), (None,), init="zeros")},
-    }
+    nodes = [
+        nng.Conv2d("conv1", in_channels=1, out_channels=c1, kernel=3,
+                   out_name_="feat", label_="cnn_layers_1"),
+        nng.NonLocalBlock("nlb", channels=c1, mid_channels=c2,
+                          taylor_order=taylor_order),
+        nng.ReLU(out_name_="cnn2_relu0", label_="cnn_layers_2.relu0"),
+        nng.Conv2d("conv2a", in_channels=c1, out_channels=c2, kernel=3,
+                   prefix_="cnn2.conv1", out_name_="cnn2_conv1",
+                   label_="cnn_layers_2.conv1"),
+        nng.ReLU(out_name_="cnn2_relu1", label_="cnn_layers_2.relu1"),
+        nng.Conv2d("conv2b", in_channels=c2, out_channels=2 * s, kernel=3,
+                   prefix_="cnn2.conv2", out_name_="cnn2_conv2",
+                   label_="cnn_layers_2.conv2"),
+        nng.ReLU(out_name_="cnn2_relu2", label_="cnn_layers_2.relu2"),
+        nng.Flatten(out_name_="flat"),
+    ]
     for li in range(4):
-        d[f"dense{li}"] = {
-            "w": ParamSpec((dims[li + 1], dims[li]), (None, None)),
-            "b": ParamSpec((dims[li + 1],), (None,), init="zeros"),
-        }
-    return d
+        nodes.append(nng.Linear(
+            f"dense{li}", in_features=dims[li], out_features=dims[li + 1],
+            prefix_=f"dense.{li}", out_name_=f"dense_{li}_out",
+            label_=f"dense.{li}"))
+        if li < 3:
+            nodes.append(nng.ReLU(out_name_=f"dense_{li}_relu",
+                                  label_=f"dense.{li}.relu"))
+    nodes.append(nng.OutputReLU(label_="dense.final_relu"))
+    return nng.ModuleGraph(
+        "braggnn", (1, 1, img, img), nodes, params=params,
+        forward_fn=lambda p, x, fmt=None: forward(p, x, s=s, fmt=fmt),
+        meta={"s": s, "img": img})
+
+
+def specs(s: int = 1, img: int = 11) -> dict:
+    """The ParamSpec tree (derived from :func:`build` — one description)."""
+    return build(s, img).specs()
 
 
 def _conv(x: jax.Array, w: jax.Array, b: Optional[jax.Array]) -> jax.Array:

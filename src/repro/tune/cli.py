@@ -18,10 +18,9 @@ import sys
 from typing import Callable, Optional
 
 from repro.tune.db import TuningDB
-from repro.tune.evaluator import Evaluator
 from repro.tune.space import SearchSpace, braggnn_space, conv2d_space
-from repro.tune.strategies import STRATEGIES, Bisection, make_strategy
-from repro.tune.tuner import TuneResult, Tuner
+from repro.tune.strategies import STRATEGIES
+from repro.tune.tuner import TuneResult
 
 
 def _braggnn_build(s: int, img: int) -> Callable:
@@ -103,12 +102,10 @@ def main(argv: Optional[list[str]] = None) -> TuneResult:
     if args.show:
         # inspect-only: a bare trace yields the fingerprint — skip the
         # evaluator's reference evaluation entirely
-        from repro.core.interp import Context
+        import repro.hls as hls
         from repro.core.pipeline import graph_fingerprint
         from repro.tune.db import best_entry
-        ctx = Context(forward=space.base.forward)
-        build(ctx)
-        fp = graph_fingerprint(ctx.finalize())
+        fp = graph_fingerprint(hls.trace(build, forward=space.base.forward))
         all_entries = db.entries_for(fp, space.space_hash())
         for ctx_hash, entry in sorted(all_entries.items()):
             c = entry.get("context", {})
@@ -130,15 +127,11 @@ def main(argv: Optional[list[str]] = None) -> TuneResult:
           f"budget={args.budget} mode={'dry' if args.dry else 'measure'}")
     print(space.describe())
 
-    print("tracing + reference evaluation ...", flush=True)
-    evaluator = Evaluator(build, space, name=args.config, batch=args.batch,
-                          seed=args.seed, tol_rel=args.tol_rel,
-                          measure=not args.dry, **eval_defaults)
-
-    if args.strategy == "bisect":
-        strategy = Bisection(target_us=args.target_us)
-    else:
-        strategy = make_strategy(args.strategy)
+    # trace + baseline compile through the public API; the tuner's own
+    # baseline trial is then a design-cache hit inside the same session
+    import repro.hls as hls
+    print("tracing + compiling the baseline design ...", flush=True)
+    design = hls.compile(build, name=args.config, config=space.base)
 
     n = [0]
 
@@ -146,9 +139,11 @@ def main(argv: Optional[list[str]] = None) -> TuneResult:
         n[0] += 1
         print(f"  trial {n[0]:3d}  {trial.summary()}", flush=True)
 
-    tuner = Tuner(evaluator, strategy, db=db, budget=args.budget,
-                  on_trial=on_trial)
-    result = tuner.run(force=args.force)
+    result = design.tune(space, strategy=args.strategy, budget=args.budget,
+                         db=db, dry=args.dry, force=args.force,
+                         target_us=args.target_us, on_trial=on_trial,
+                         batch=args.batch, seed=args.seed,
+                         tol_rel=args.tol_rel, **eval_defaults)
 
     if result.from_db:
         print(f"served from tuning DB ({db.path}) — no search run; "

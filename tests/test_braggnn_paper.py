@@ -75,22 +75,26 @@ def test_quantized_functional_model(braggnn_graphs):
     assert np.abs(q53 - ref).max() >= np.abs(q54 - ref).max() * 0.3
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="pre-existing seed failure: 120 Adam steps on synthetic peaks "
-           "reduce the loss ~2.3x on CPU jax, short of the 5x bar; the "
-           "substrate trains but the budget/assert is miscalibrated for "
-           "this hardware (tracked in ROADMAP.md open items)")
 def test_braggnn_training_converges():
-    """End-to-end substrate check: a few hundred Adam steps on synthetic
-    peaks reduce the localisation loss by >5x (paper's model is trainable
-    in our stack)."""
+    """End-to-end substrate check: 200 Adam steps on synthetic peaks reduce
+    the held-out localisation loss by >5x (paper's model is trainable in
+    our stack).
+
+    Recalibrated by a seeded lr/step-budget sweep on CPU jax (2026-07-28):
+    with the original peak_lr <= 1e-2 the loss plateaus at ~2x (a dead
+    basin just below the mean predictor); peak_lr=3e-2 on a near-constant
+    schedule (total_steps >> steps) escapes it and reaches ~700x on this
+    seed (worst case 33x across seed variants), so the 5x bar holds with
+    wide margin.  The eval loss is measured on a fixed held-out batch,
+    which is less noisy than the final minibatch loss.
+    """
     from repro.optim import adamw
     cfg_img = 11
+    steps = 200
     sp = braggnn.specs(1, cfg_img)
     params = module.init_tree(sp, jax.random.key(0))
-    opt_cfg = adamw.AdamWConfig(peak_lr=3e-3, warmup_steps=10,
-                                total_steps=120, weight_decay=0.0)
+    opt_cfg = adamw.AdamWConfig(peak_lr=3e-2, warmup_steps=20,
+                                total_steps=10 * steps, weight_decay=0.0)
     state = adamw.init_state(params)
 
     def loss_fn(p, x, y):
@@ -103,13 +107,16 @@ def test_braggnn_training_converges():
         p2, s2, _ = adamw.apply_updates(opt_cfg, p, g, s)
         return p2, s2, l
 
+    eval_x, eval_y = braggnn.synthetic_peaks(jax.random.key(99), 256,
+                                             img=cfg_img)
+    first = float(loss_fn(params, eval_x, eval_y))
     key = jax.random.key(1)
-    first = last = None
-    for i in range(120):
-        x, y = braggnn.synthetic_peaks(jax.random.fold_in(key, i), 32,
+    for i in range(steps):
+        x, y = braggnn.synthetic_peaks(jax.random.fold_in(key, i), 64,
                                        img=cfg_img)
         params, state, l = step(params, state, x, y)
-        if first is None:
-            first = float(l)
-        last = float(l)
+    last = float(loss_fn(params, eval_x, eval_y))
     assert last < first / 5, (first, last)
+    # and it genuinely localises: well below the ~1.7 loss of always
+    # predicting the mean centre (the plateau the old lr never escaped)
+    assert last < 1.0, last

@@ -1,0 +1,135 @@
+"""The nn -> loop-nest bridge: fingerprint equivalence + vocabulary.
+
+The acceptance criterion of the api_redesign: ``hls.compile`` of the jax
+BraggNN module graph yields the same ``graph_fingerprint`` (and
+CompiledDesign hash) as the hand-written ``frontend.braggnn`` path.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+import repro.hls as hls
+from repro.core import frontend
+from repro.core.pipeline import graph_fingerprint
+from repro.models import braggnn
+from repro.nn import graph as nng
+
+
+# ---------------------------------------------------------------------------
+# BraggNN equivalence (reduced img=7 keeps CI fast, as in test_braggnn_paper)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def session():
+    return hls.Session()
+
+
+@pytest.fixture(scope="module")
+def bridged(session):
+    return session.compile(braggnn.build(1, 7), name="braggnn_bridge")
+
+
+def test_braggnn_fingerprint_equals_handwritten(bridged):
+    g_hand = hls.trace(lambda ctx: frontend.braggnn(ctx, s=1, img=7))
+    assert bridged.fingerprint == graph_fingerprint(g_hand)
+
+
+def test_braggnn_design_hash_equals_handwritten(bridged, session):
+    # same fingerprint + same config => the hand-written compile is served
+    # from the very cache entry the bridged compile created
+    hits = session.stats()["hits"]
+    d_hand = session.compile(
+        lambda ctx: frontend.braggnn(ctx, s=1, img=7), name="braggnn_hand")
+    assert d_hand.design_hash == bridged.design_hash
+    assert session.stats()["hits"] == hits + 1
+
+
+def test_braggnn_module_runs_with_trained_weights(bridged):
+    """Bound params flow through ``Design.run`` and match the tensor twin."""
+    model = braggnn.build(1, 7)
+    params = model.init_params(jax.random.key(0))
+    design = hls.compile(model.bind(params), session=bridged.session,
+                         name="braggnn_bound")
+    rng = np.random.default_rng(0)
+    x = rng.normal(0.0, 0.25, (2, 1, 7, 7)).astype(np.float32)
+    out = design.run(x)["dense_3_out"]
+    ref = braggnn.forward(params, x[:1])  # tensor model, first sample
+    np.testing.assert_allclose(out[0, 0], np.asarray(ref)[0],
+                               rtol=5e-2, atol=5e-3)
+
+
+def test_braggnn_specs_match_module_graph():
+    """models.braggnn.specs is derived from build(): same tree, shapes."""
+    sp = braggnn.specs(1, 7)
+    assert set(sp) == {"conv1", "nlb", "conv2a", "conv2b",
+                       "dense0", "dense1", "dense2", "dense3"}
+    assert sp["conv1"]["w"].shape == (16, 1, 3, 3)
+    assert sp["nlb"]["theta"]["w"].shape == (8, 16, 1, 1)
+    assert sp["dense3"]["w"].shape == (2, 4)
+    assert sp["conv1"]["b"].init == "zeros"
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary coverage (small shapes)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_module(**kw):
+    nodes = [
+        nng.Conv2d("c1", in_channels=1, out_channels=2, kernel=3),
+        nng.BatchNorm2d("bn", channels=2),
+        nng.ReLU(name="r1"),
+        nng.MaxPool2d(name="mp", kernel=2, stride=2),
+        nng.Flatten(name="fl"),
+        nng.Linear("fc", in_features=2 * 3 * 3, out_features=4),
+        nng.Softmax(name="sm"),
+    ]
+    return nng.ModuleGraph("tiny", (1, 1, 8, 8), nodes, **kw)
+
+
+def test_vocabulary_compiles_and_runs(session):
+    m = _tiny_module()
+    m = m.bind(m.init_params(jax.random.key(1)))
+    x = np.random.default_rng(1).normal(0, 0.5, (3, 1, 8, 8)).astype(
+        np.float32)
+    design = session.compile(m, example_inputs=x)
+    out = design.run()["sm_out"]
+    assert out.shape == (3, 1, 4)
+    np.testing.assert_allclose(out.sum(-1), 1.0, atol=1e-3)
+
+
+def test_shapes_inference():
+    m = _tiny_module()
+    assert m.shapes() == [(1, 2, 6, 6), (1, 2, 6, 6), (1, 2, 6, 6),
+                          (1, 2, 3, 3), (1, 18), (1, 4), (1, 4)]
+    assert m.output_shape == (1, 4)
+
+
+def test_weight_feeds_names_and_shapes():
+    m = _tiny_module()
+    params = m.init_params(jax.random.key(0))
+    feeds = m.weight_feeds(params)
+    assert set(feeds) == {"c1.weight", "c1.bias", "bn.gamma", "bn.beta",
+                          "bn.mean", "bn.var", "fc.weight", "fc.bias"}
+    assert feeds["c1.weight"].shape == (2, 1, 3, 3)
+    assert feeds["fc.weight"].shape == (4, 18)
+
+
+def test_module_graph_validates_vocabulary():
+    class Alien:
+        pass
+    with pytest.raises(TypeError, match="vocabulary"):
+        nng.ModuleGraph("bad", (1, 1, 4, 4), [Alien()])
+    with pytest.raises(ValueError, match="last node"):
+        nng.ModuleGraph("bad", (1, 1, 4, 4),
+                        [nng.OutputReLU(), nng.ReLU(name="r")])
+
+
+def test_unbound_module_requires_weight_feeds(session):
+    m = _tiny_module()          # no params bound
+    design = session.compile(m, name="tiny_unbound")
+    x = np.zeros((1, 1, 8, 8), np.float32)
+    with pytest.raises(KeyError, match="missing feed"):
+        design.run(x)
