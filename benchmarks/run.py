@@ -70,17 +70,22 @@ def write_report(results: dict, args, out_path=None) -> pathlib.Path:
     # machine-readable across PRs
     pass_times = {}
     compiler = {}
+    backends = {}
     bragg = results.get("bench_braggnn", {}).get("result") or {}
     if isinstance(bragg, dict) and "pass_s" in bragg:
         pass_times["braggnn"] = bragg["pass_s"]
         compiler["braggnn"] = {k: bragg[k] for k in _COMPILER_FIELDS
                                if k in bragg}
+    if isinstance(bragg, dict) and "backends" in bragg:
+        # per-serving-backend µs/sample — the serving-perf trajectory
+        backends["braggnn"] = bragg["backends"]
     report = {
         "date": date,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "args": {"fast": args.fast, "only": args.only},
         "pass_times_s": pass_times,
         "compiler": compiler,
+        "backends_us_per_sample": backends,
         "benchmarks": _jsonable(results),
     }
     path.write_text(json.dumps(report, indent=1, sort_keys=True))
@@ -118,6 +123,21 @@ def compare_with_previous(report: dict, path: pathlib.Path) -> None:
               f"{new_b['pass_ops_per_s']:,} ops/s"
               + (f" (was {old_b['pass_ops_per_s']:,})"
                  if old_b.get("pass_ops_per_s") else ""))
+
+    def _backends(b):
+        if isinstance(b.get("backends"), dict):
+            return b["backends"]
+        # pre-backends reports carried two flat keys
+        legacy = {"simd": b.get("simd_us_per_sample_cpu"),
+                  "tensor": b.get("tensor_us_per_sample_cpu")}
+        return {k: round(v, 1) for k, v in legacy.items() if v is not None}
+
+    old_bk, new_bk = _backends(old_b), _backends(new_b)
+    if new_bk:
+        print("#   serving backends (us/sample): "
+              + ", ".join(f"{name} {old_bk.get(name, '-')} -> "
+                          f"{new_bk.get(name, '-')}"
+                          for name in sorted(set(old_bk) | set(new_bk))))
 
 
 def main() -> None:

@@ -111,7 +111,54 @@ def _level_groups(c: GraphCols, n_values: int):
     oc_s = c.opcode[order]
     brk = np.flatnonzero((np.diff(lv_s) != 0) | (np.diff(oc_s) != 0)) + 1
     for rows in np.split(order, brk):
-        yield OPCODES[c.opcode[rows[0]]], rows
+        yield int(op_level[rows[0]]), OPCODES[c.opcode[rows[0]]], rows
+
+
+def compile_groups(c: GraphCols, n_values: int
+                   ) -> list[tuple[int, str, list[np.ndarray], np.ndarray]]:
+    """Precompute the gather/scatter index arrays per (level, opcode) group.
+
+    Returns ``(level, opcode, [arg index arrays], result index array)``
+    tuples in level order — the shared unit of emission for the SIMD
+    rendering (:func:`to_jax_fn`) and the Pallas backend
+    (``repro.core.emit_pallas``), which fuses contiguous runs of them into
+    compiled kernels.
+    """
+    groups = []
+    for lv, oc, rows in _level_groups(c, n_values):
+        ga = c.args[rows]
+        n_args = int((ga >= 0).sum(axis=1).max()) if len(rows) else 0
+        arg_idx = [np.where(ga[:, i] >= 0, ga[:, i], 0).astype(np.int32)
+                   for i in range(n_args)]
+        res_idx = c.result[rows].astype(np.int32)
+        groups.append((lv, oc, arg_idx, res_idx))
+    return groups
+
+
+def io_tables(g: Graph):
+    """Constant / input-scatter / output-gather index tables of a DFG.
+
+    Shared by every vectorised emitter: ``const_idx``/``const_val`` seed the
+    value buffer, ``input_scatter[name] = (vids, idx tuples)`` place feeds,
+    ``output_gather[name] = (vids, shape)`` assemble outputs.
+    """
+    const_idx = np.array(sorted(g.consts), dtype=np.int32)
+    const_val = np.array([g.consts[int(i)] for i in const_idx],
+                         dtype=np.float32)
+    input_scatter = {
+        name: (np.array([vid for _, vid in sorted(table.items())],
+                        dtype=np.int32),
+               [idx for idx, _ in sorted(table.items())])
+        for name, table in g.inputs.items()
+    }
+    output_gather = {
+        name: (np.array([vid for _, vid in sorted(table.items())],
+                        dtype=np.int32),
+               tuple(max(i[d] for i in table) + 1
+                     for d in range(len(next(iter(table))))))
+        for name, table in g.outputs.items()
+    }
+    return const_idx, const_val, input_scatter, output_gather
 
 
 def _assemble_outputs(g: Graph, batch: int, value_of
@@ -176,7 +223,7 @@ def evaluate(g: Graph, feeds: dict[str, np.ndarray], *,
                                      (len(cvals), batch)).copy())
 
     args, res = c.args, c.result
-    for oc, rows in _level_groups(c, g.n_values):
+    for _lv, oc, rows in _level_groups(c, g.n_values):
         a0 = M[args[rows, 0]]
         if oc == "mulf":
             r = a0 * M[args[rows, 1]]
@@ -222,44 +269,44 @@ def evaluate(g: Graph, feeds: dict[str, np.ndarray], *,
 # SIMD emission: the TPU rendering of the fully scheduled design
 # ---------------------------------------------------------------------------
 
-def to_jax_fn(g: Graph) -> Callable[[dict[str, "np.ndarray"]], dict[str, "np.ndarray"]]:
+#: valid values for the ``backend=`` of :func:`to_jax_fn` (and the emission
+#: half of ``Design.serve``): the SIMD interpretation vs the Pallas-native
+#: compiled rendering
+EMIT_BACKENDS = ("simd", "pallas")
+
+
+def to_jax_fn(g: Graph, *, backend: str = "simd", **pallas_kw
+              ) -> Callable[[dict[str, "np.ndarray"]], dict[str, "np.ndarray"]]:
     """Emit a jittable function that exactly evaluates the DFG.
 
-    The DFG is levelised (ASAP with unit delays); each (level, opcode) group
-    becomes one gather -> vector op -> scatter.  This is the SIMD analogue of
-    RTL emission: every op executes at its scheduled level, with no dynamic
-    control flow — the XLA program is the FSM.
+    ``backend='simd'`` (default): the DFG is levelised (ASAP with unit
+    delays); each (level, opcode) group becomes one gather -> vector op ->
+    scatter.  This is the SIMD analogue of RTL emission: every op executes
+    at its scheduled level, with no dynamic control flow — the XLA program
+    is the FSM.
+
+    ``backend='pallas'``: contiguous runs of levelised groups are fused
+    into compiled kernels instead of interpreted — see
+    :func:`repro.core.emit_pallas.to_pallas_fn`, which also accepts
+    ``module=`` for the nest-pattern fast path (extra keywords are
+    forwarded).  The returned callable carries its lowering ``.plan``.
     """
+    if backend not in EMIT_BACKENDS:
+        raise ValueError(f"unknown emission backend {backend!r} "
+                         f"(valid: {', '.join(EMIT_BACKENDS)})")
+    if backend == "pallas":
+        from repro.core.emit_pallas import to_pallas_fn
+        return to_pallas_fn(g, **pallas_kw)
+    if pallas_kw:
+        raise TypeError(f"backend='simd' takes no extra keywords, got "
+                        f"{sorted(pallas_kw)}")
     import jax
     import jax.numpy as jnp
 
     c = g.cols()
-    # precompute gather/scatter index arrays per (level, opcode) group
-    compiled_groups = []
-    for oc, rows in _level_groups(c, g.n_values):
-        ga = c.args[rows]
-        n_args = int((ga >= 0).sum(axis=1).max()) if len(rows) else 0
-        arg_idx = [np.where(ga[:, i] >= 0, ga[:, i], 0).astype(np.int32)
-                   for i in range(n_args)]
-        res_idx = c.result[rows].astype(np.int32)
-        compiled_groups.append((oc, arg_idx, res_idx))
-
-    const_idx = np.array(sorted(g.consts), dtype=np.int32)
-    const_val = np.array([g.consts[int(i)] for i in const_idx],
-                         dtype=np.float32)
-    input_scatter = {
-        name: (np.array([vid for _, vid in sorted(table.items())],
-                        dtype=np.int32),
-               [idx for idx, _ in sorted(table.items())])
-        for name, table in g.inputs.items()
-    }
-    output_gather = {
-        name: (np.array([vid for _, vid in sorted(table.items())],
-                        dtype=np.int32),
-               tuple(max(i[d] for i in table) + 1
-                     for d in range(len(next(iter(table))))))
-        for name, table in g.outputs.items()
-    }
+    compiled_groups = [(oc, arg_idx, res_idx) for _lv, oc, arg_idx, res_idx
+                       in compile_groups(c, g.n_values)]
+    const_idx, const_val, input_scatter, output_gather = io_tables(g)
     n_values = g.n_values
 
     def run(feeds: dict[str, jax.Array]) -> dict[str, jax.Array]:

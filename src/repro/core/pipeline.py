@@ -456,8 +456,20 @@ class CompiledDesign:
 
     # -- execution backends -------------------------------------------------
 
-    def jax_fn(self) -> Callable:
-        """The emitted SIMD design (jittable), materialised on first use."""
+    def jax_fn(self, *, backend: str = "simd", **pallas_kw) -> Callable:
+        """The emitted design as a callable, materialised on first use.
+
+        ``backend='simd'`` (cached): the jittable gather/compute/scatter
+        interpretation.  ``backend='pallas'``: the compiled rendering
+        (``emit_pallas``), rebuilt per call since its lowering depends on
+        the extra keywords (``module=``, ``fmt=``, ``use_pallas=``, ...).
+        """
+        if backend != "simd":
+            return emit.to_jax_fn(self.graph_opt, backend=backend,
+                                  **pallas_kw)
+        if pallas_kw:
+            raise TypeError(f"backend='simd' takes no extra keywords, got "
+                            f"{sorted(pallas_kw)}")
         if self._jax_fn is None:
             self._jax_fn = emit.to_jax_fn(self.graph_opt)
         return self._jax_fn

@@ -69,6 +69,11 @@ class ServeReport:
     warmup_s: float = 0.0
     #: per-batch outputs, only kept when ``collect=True``
     outputs: Optional[list] = None
+    #: what actually served — the Pallas lowering's plan summary (tier,
+    #: fused kernels, fallback count); equals ``backend`` otherwise
+    served: Optional[str] = None
+    #: per-group / per-node tensor-path fallbacks the Pallas lowering took
+    fallbacks: list = dataclasses.field(default_factory=list)
 
     @property
     def us_per_sample(self) -> float:
@@ -77,9 +82,10 @@ class ServeReport:
     def summary(self) -> str:
         fmt = "fp32" if self.fmt in (None, "fp32") else \
             f"({self.fmt.replace('_', ',')})"
+        served = self.served or self.backend
         return (f"served {self.samples} samples in {self.batches} batches: "
                 f"{self.us_per_sample:.2f} us/sample "
-                f"[{self.backend} backend, {fmt}; "
+                f"[{served} backend, {fmt}; "
                 f"warm-up {self.warmup_s:.2f}s]")
 
 
@@ -234,8 +240,25 @@ class Design:
         """
         return self._compiled.evaluate(self.feeds(inputs), fmt=fmt, raw=raw)
 
-    def jax_fn(self) -> Callable:
-        """The emitted SIMD design (jittable)."""
+    def jax_fn(self, *, backend: str = "simd", **pallas_kw) -> Callable:
+        """The emitted design as a callable.
+
+        ``backend='simd'`` (default): the jittable SIMD interpretation.
+        ``backend='pallas'``: the compiled Pallas rendering — fused
+        levelised op groups, registry kernels for bridged modules (the
+        source ``ModuleGraph`` is passed automatically when the design was
+        compiled from one); extra keywords (``fmt=``, ``mode=``,
+        ``use_pallas=``, ...) forward to
+        :func:`repro.core.emit_pallas.to_pallas_fn`, and the result
+        carries its lowering ``.plan``.
+        """
+        from repro.core.emit import EMIT_BACKENDS
+        if backend not in EMIT_BACKENDS:
+            raise ValueError(f"unknown emission backend {backend!r} "
+                             f"(valid: {', '.join(EMIT_BACKENDS)})")
+        if backend == "pallas":
+            pallas_kw.setdefault("module", self._module)
+            return self._compiled.jax_fn(backend="pallas", **pallas_kw)
         return self._compiled.jax_fn()
 
     # -- verification -------------------------------------------------------
@@ -345,22 +368,29 @@ class Design:
 
     def serve(self, batch_iter: Iterable, *, fmt: Optional[str] = None,
               backend: Optional[str] = None, collect: bool = False,
-              on_batch=None) -> ServeReport:
+              on_batch=None, pallas_kw: Optional[dict] = None
+              ) -> ServeReport:
         """The warmed batched serving loop.
 
         ``backend='tensor'`` jits the module's fused tensor-level forward
         (requires a bound ``ModuleGraph`` with a ``forward_fn``) at FloPoCo
         format key ``fmt``; ``backend='simd'`` jits the emitted SIMD design
-        (fp32).  Default: tensor when available, else simd.  The first
-        batch warms the jit (timed separately); every batch is then
-        blocked-on individually, server-style.  ``on_batch(i, out)`` is
-        called per batch; ``collect=True`` additionally keeps outputs.
+        (fp32); ``backend='pallas'`` runs the compiled Pallas rendering
+        (registry kernels / fused op-group segments — extra lowering
+        keywords via ``pallas_kw``), recording which tier actually served
+        and any per-group tensor fallbacks in the report.  Default: tensor
+        when available, else simd.  The first batch warms the jit (timed
+        separately); every batch is then blocked-on individually,
+        server-style.  ``on_batch(i, out)`` is called per batch;
+        ``collect=True`` additionally keeps outputs.
         """
         import jax
         if backend is None:
             backend = ("tensor" if self._module is not None
                        and self._module.forward_fn is not None
                        and self._module.params is not None else "simd")
+        served = None
+        fallbacks: list = []
         if backend == "tensor":
             if (self._module is None or self._module.forward_fn is None
                     or self._module.params is None):
@@ -378,12 +408,21 @@ class Design:
             # feeds() accepts bare input arrays or (partial) feed dicts and
             # merges any bound module weights
             run_one = lambda x: jfn(self.feeds(x))
+        elif backend == "pallas":
+            # already internally jitted; the nest tier normalises weight
+            # feeds host-side, so no extra jax.jit wrapper here
+            pfn = self.jax_fn(backend="pallas", fmt=fmt,
+                              **(pallas_kw or {}))
+            served = pfn.plan.summary()
+            fallbacks = list(pfn.plan.fallbacks)
+            run_one = lambda x: pfn(self.feeds(x))
         else:
             raise ValueError(f"unknown backend {backend!r} "
-                             f"(expected 'tensor' or 'simd')")
+                             f"(expected 'tensor', 'simd' or 'pallas')")
 
         report = ServeReport(backend=backend, fmt=fmt,
-                             outputs=[] if collect else None)
+                             outputs=[] if collect else None,
+                             served=served, fallbacks=fallbacks)
         it = iter(batch_iter)
         try:
             first = next(it)

@@ -10,4 +10,9 @@ smallfloat_matmul — reduced-precision MAC array (paper §4.2)
 conv2d_vmem       — weights-resident BraggNN conv (paper's no-BRAM result)
 flash_attention   — blockwise attention (32k prefill path)
 fused_softmax     — fused softmax incl. Taylor-exp mode (paper §3/§4.1)
+
+``registry.py`` catalogues the four as pattern-matched fast paths
+(``KERNELS``: nn-graph node -> kernel entry) plus the scalar-DFG opcode
+table (``OPCODE_KERNELS``) — the tables the Pallas emission backend
+(``repro.core.emit_pallas``) lowers through.
 """

@@ -12,9 +12,10 @@ from repro.kernels.smallfloat_matmul.ref import smallfloat_matmul_ref
 from repro.kernels.smallfloat_matmul.smallfloat_matmul import smallfloat_matmul
 
 
-def matmul(x: jax.Array, w: jax.Array, b=None, *, exp_bits: int = 5,
-           man_bits: int = 4, fuse_relu: bool = False,
+def matmul(x: jax.Array, w: jax.Array, b=None, *, exp_bits=5,
+           man_bits=4, fuse_relu: bool = False,
            use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+    """``exp_bits=None`` skips operand quantisation (plain fp32 matmul)."""
     if use_pallas:
         return smallfloat_matmul(x, w, b, exp_bits=exp_bits,
                                  man_bits=man_bits, fuse_relu=fuse_relu,

@@ -11,9 +11,11 @@ from repro.core.precision import FloatFormat, quantize
 def smallfloat_matmul_ref(x: jax.Array, w: jax.Array, b=None, *,
                           exp_bits: int = 5, man_bits: int = 4,
                           fuse_relu: bool = False) -> jax.Array:
-    fmt = FloatFormat(exp_bits, man_bits)
-    xq = quantize(x.astype(jnp.float32), fmt)
-    wq = quantize(w.astype(jnp.float32), fmt)
+    xq, wq = x.astype(jnp.float32), w.astype(jnp.float32)
+    if exp_bits is not None:      # None = plain fp32 (no quantisation)
+        fmt = FloatFormat(exp_bits, man_bits)
+        xq = quantize(xq, fmt)
+        wq = quantize(wq, fmt)
     out = xq @ wq
     if b is not None:
         out = out + b.astype(jnp.float32)

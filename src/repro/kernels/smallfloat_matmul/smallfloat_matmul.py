@@ -21,8 +21,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _quantize_block(x, exp_bits: int, man_bits: int):
-    """RNE quantisation to (wE,wF) with FTZ + saturation (fp32 in/out)."""
+def _quantize_block(x, exp_bits, man_bits):
+    """RNE quantisation to (wE,wF) with FTZ + saturation (fp32 in/out).
+
+    ``exp_bits=None`` means full fp32 — the identity — so one kernel serves
+    both the reduced-precision MAC array and the plain fp32 fast path.
+    """
+    if exp_bits is None:
+        return x
     bias = (1 << (exp_bits - 1)) - 1
     emax = bias
     emin = 1 - bias
