@@ -12,6 +12,11 @@ so the perf trajectory across PRs is diffable.  Mapping to the paper:
     braggnn       — §4.2/Fig. 6 (end-to-end case study)
     precision     — Fig. 7   (trained-weight exponents, accuracy sweep)
     roofline      — §Roofline (TPU adaptation; reads dry-run artifacts)
+    serving       — deployment: sustained QPS / tail latency / warm boot
+
+Re-running the same day merges into the existing ``BENCH_<date>.json``:
+sections whose benchmark was skipped (``--only``) carry forward from the
+earlier run instead of being dropped.
 """
 
 from __future__ import annotations
@@ -61,16 +66,28 @@ _COMPILER_FIELDS = ("build_s", "trace_s", "passes_s", "schedule_s",
 
 
 def write_report(results: dict, args, out_path=None) -> pathlib.Path:
-    """Aggregate all results into ``BENCH_<date>.json`` at the repo root."""
+    """Aggregate all results into ``BENCH_<date>.json`` at the repo root.
+
+    An existing same-day report is MERGED, not clobbered: per-benchmark
+    entries and derived sections from benchmarks not re-run this
+    invocation (``--only``) are carried forward.
+    """
     date = time.strftime("%Y-%m-%d")
     path = pathlib.Path(out_path) if out_path else \
         REPO_ROOT / f"BENCH_{date}.json"
+    old = {}
+    if path.exists():
+        try:
+            old = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError):
+            old = {}
     # surface per-pass PassReport wall times and compiler throughput as
     # first-class keys so the perf trajectory of the compiler itself is
     # machine-readable across PRs
-    pass_times = {}
-    compiler = {}
-    backends = {}
+    pass_times = dict(old.get("pass_times_s") or {})
+    compiler = dict(old.get("compiler") or {})
+    backends = dict(old.get("backends_us_per_sample") or {})
+    serving = dict(old.get("serving") or {})
     bragg = results.get("bench_braggnn", {}).get("result") or {}
     if isinstance(bragg, dict) and "pass_s" in bragg:
         pass_times["braggnn"] = bragg["pass_s"]
@@ -79,6 +96,12 @@ def write_report(results: dict, args, out_path=None) -> pathlib.Path:
     if isinstance(bragg, dict) and "backends" in bragg:
         # per-serving-backend µs/sample — the serving-perf trajectory
         backends["braggnn"] = bragg["backends"]
+    srv = results.get("bench_serving", {}).get("result") or {}
+    if isinstance(srv, dict) and srv:
+        # sustained QPS / tail latency / warm-boot trajectory
+        serving = _jsonable(srv)
+    benchmarks = dict(old.get("benchmarks") or {})
+    benchmarks.update(_jsonable(results))
     report = {
         "date": date,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -86,7 +109,8 @@ def write_report(results: dict, args, out_path=None) -> pathlib.Path:
         "pass_times_s": pass_times,
         "compiler": compiler,
         "backends_us_per_sample": backends,
-        "benchmarks": _jsonable(results),
+        "serving": serving,
+        "benchmarks": benchmarks,
     }
     path.write_text(json.dumps(report, indent=1, sort_keys=True))
     return path
@@ -140,6 +164,32 @@ def compare_with_previous(report: dict, path: pathlib.Path) -> None:
                           for name in sorted(set(old_bk) | set(new_bk))))
 
 
+def compare_serving(report: dict, path: pathlib.Path) -> None:
+    """Per-metric before/after diff of the ``serving`` section (engine QPS,
+    tail latency, warm boot) against the most recent other report."""
+    previous = sorted(p for p in REPO_ROOT.glob("BENCH_*.json")
+                      if p.resolve() != path.resolve())
+    new_s = report.get("serving") or {}
+    if not (previous and new_s.get("backends")):
+        return
+    try:
+        old = json.loads(previous[-1].read_text())
+    except (OSError, json.JSONDecodeError):
+        return
+    old_s = old.get("serving") or {}
+    old_bk = old_s.get("backends") or {}
+    print(f"# serving vs {previous[-1].name}:")
+    for name in sorted(new_s["backends"]):
+        nb, ob = new_s["backends"][name], old_bk.get(name) or {}
+        for metric in ("qps", "p50_ms", "p95_ms", "p99_ms",
+                       "max_queue_depth"):
+            print(f"#   {name}.{metric}: {ob.get(metric, '-')} -> "
+                  f"{nb.get(metric, '-')}")
+    for metric in ("cold_compile_s", "warm_boot_s", "warm_speedup"):
+        print(f"#   {metric}: {old_s.get(metric, '-')} -> "
+              f"{new_s.get(metric, '-')}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -151,10 +201,12 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (bench_braggnn, bench_layers, bench_precision,
-                            bench_roofline, bench_tool_runtime)
+                            bench_roofline, bench_serving,
+                            bench_tool_runtime)
 
     todo = args.only.split(",") if args.only else [
-        "layers", "tool_runtime", "braggnn", "precision", "roofline"]
+        "layers", "tool_runtime", "braggnn", "precision", "roofline",
+        "serving"]
 
     results: dict = {}
     print("name,us_per_call,derived")
@@ -177,10 +229,14 @@ def main() -> None:
     if "roofline" in todo:
         print("## §Roofline: 40-cell table ##")
         _timed("bench_roofline", results, bench_roofline.main)
+    if "serving" in todo:
+        print("## deployment: serving engine under bursty load ##")
+        _timed("bench_serving", results, bench_serving.main, fast=args.fast)
 
     path = write_report(results, args, args.out)
     report = json.loads(path.read_text())
     compare_with_previous(report, path)
+    compare_serving(report, path)
     print(f"# aggregate report: {path}")
 
 

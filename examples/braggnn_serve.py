@@ -3,6 +3,8 @@
     PYTHONPATH=src python examples/braggnn_serve.py
     PYTHONPATH=src python examples/braggnn_serve.py --tuned
     PYTHONPATH=src python examples/braggnn_serve.py --pipeline cse,dce
+    PYTHONPATH=src python examples/braggnn_serve.py --engine --save b.design
+    PYTHONPATH=src python examples/braggnn_serve.py --engine --load b.design
 
 Trains BraggNN briefly on synthetic Bragg peaks, binds the trained weights
 into the declarative module graph (``models.braggnn.build``), and compiles
@@ -18,6 +20,12 @@ persistent ``TuningDB`` via ``Design.apply_tuned`` (populate it with
 probed); ``--pipeline`` overrides the pass pipeline by hand.  Designs are
 cached under the shared versioned cache root (``cache=True``), so warm
 runs serve the schedule from disk.
+
+``--engine`` additionally fronts the design with the async adaptive-
+batching engine (``Design.engine``) and prints its tail-latency summary;
+``--save PATH`` persists the warm-boot artifact, ``--load PATH`` boots
+from one instead of training + compiling (and is the engine's replica-
+restart source).
 """
 
 import argparse
@@ -40,6 +48,14 @@ def parse_args(argv=None):
                     help="override the pass pipeline (comma-separated)")
     ap.add_argument("--db", default=None,
                     help="TuningDB path (default: shared cache root)")
+    ap.add_argument("--engine", action="store_true",
+                    help="also serve through the async adaptive-batching "
+                         "engine and print its tail-latency summary")
+    ap.add_argument("--save", default=None, metavar="PATH",
+                    help="persist the warm-boot artifact (Design.save)")
+    ap.add_argument("--load", default=None, metavar="PATH",
+                    help="boot from a saved artifact instead of "
+                         "training + compiling (hls.load)")
     return ap.parse_args(argv)
 
 
@@ -66,8 +82,37 @@ def train(model: hls.ModuleGraph, steps: int = 150) -> dict:
     return params
 
 
+def serve_engine(design, serve_fmt, save_path=None) -> None:
+    """Front the design with the async engine; print the tail-latency
+    summary (and where a poisoned replica would warm-boot from)."""
+    x, y = braggnn.synthetic_peaks(jax.random.key(7), 256)
+    samples = jnp.asarray(x)[:, None]            # (N, 1, img, img) memrefs
+    eng = design.engine(backend="tensor", fmt=serve_fmt, max_batch=16,
+                        max_delay_ms=2.0, artifact_path=save_path)
+    with eng:
+        reqs = [eng.submit(s) for s in samples]
+        for r in reqs:
+            r.wait(timeout=60)
+    print(f"engine: {eng.report().summary()}")
+
+
 def main(argv=None) -> None:
     args = parse_args(argv)
+
+    if args.load:
+        # --- warm boot: one disk read, no training, no compile -------------
+        t0 = time.perf_counter()
+        design = hls.load(args.load)
+        print(f"warm boot from {args.load}: {time.perf_counter() - t0:.2f}s "
+              f"({design.name}, hash {design.design_hash[:12]})")
+        serve_fmt = design.manifest.get("fmt")
+        if args.engine:
+            serve_engine(design, serve_fmt, save_path=args.load)
+        else:
+            x, _ = braggnn.synthetic_peaks(jax.random.key(7), 1024)
+            print(design.serve([x] * 10, fmt=serve_fmt,
+                               backend="tensor").summary())
+        return
 
     # --- describe once, train, bind ----------------------------------------
     model = braggnn.build(s=1)
@@ -119,6 +164,14 @@ def main(argv=None) -> None:
     err_px = float(jnp.mean(jnp.abs(pred / 10.0 - y))) * 11
     print(f"{report.summary()}; "
           f"mean localisation error {err_px:.3f} px")
+
+    # --- warm-boot artifact + async engine ---------------------------------
+    if args.save:
+        path = design.save(args.save, backend="tensor", fmt=serve_fmt)
+        print(f"saved warm-boot artifact: {path} "
+              f"({path.stat().st_size:,} bytes)")
+    if args.engine:
+        serve_engine(design, serve_fmt, save_path=args.save)
 
 
 if __name__ == "__main__":

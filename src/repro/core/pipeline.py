@@ -500,6 +500,58 @@ class CompiledDesign:
 
 
 # ---------------------------------------------------------------------------
+# Warm-boot design artifacts
+# ---------------------------------------------------------------------------
+
+#: First bytes-level sanity mark of a ``Design.save`` artifact file.
+ARTIFACT_MAGIC = "repro-design-artifact"
+
+
+def save_artifact(path: Union[str, Path], payload: dict) -> Path:
+    """Persist a warm-boot design artifact (versioned pickle, atomic write).
+
+    ``payload`` is the ``Design.save`` bundle: the ``CompiledDesign``, the
+    (numpy-ified) bound module, example inputs and the warmed-bucket
+    manifest.  The pickle shares the design cache's format version, so a
+    layout change invalidates saved artifacts the same way it invalidates
+    cached designs — :func:`load_artifact` rejects stale files loudly
+    instead of unpickling into incompatible objects.
+    """
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    record = {"magic": ARTIFACT_MAGIC, "version": CACHE_FORMAT_VERSION,
+              **payload}
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    with open(tmp, "wb") as f:
+        pickle.dump(record, f)
+    tmp.replace(path)
+    return path
+
+
+def load_artifact(path: Union[str, Path]) -> dict:
+    """Load and validate a ``save_artifact`` file.
+
+    Raises ``FileNotFoundError`` / ``ValueError`` with the exact reason
+    (missing, not an artifact, or saved under a different
+    ``CACHE_FORMAT_VERSION`` — re-save from a fresh compile).
+    """
+    path = Path(path)
+    if not path.exists():
+        raise FileNotFoundError(f"no design artifact at {path}")
+    with open(path, "rb") as f:
+        record = pickle.load(f)
+    if not isinstance(record, dict) or record.get("magic") != ARTIFACT_MAGIC:
+        raise ValueError(f"{path} is not a repro design artifact")
+    version = record.get("version")
+    if version != CACHE_FORMAT_VERSION:
+        raise ValueError(
+            f"design artifact {path} was saved with format version "
+            f"{version}, this build expects {CACHE_FORMAT_VERSION} — "
+            f"recompile and Design.save again")
+    return record
+
+
+# ---------------------------------------------------------------------------
 # Design cache
 # ---------------------------------------------------------------------------
 

@@ -20,17 +20,24 @@ or a traced ``Graph``.  The returned :class:`Design` carries the verbs:
 ``with_config`` (recompile sharing the trace), ``serve`` (warmed batched
 loop) and ``report``.
 
+Deployment round-trips through warm-boot artifacts:
+``design.save(path)`` persists the compiled design + bound weights +
+warmed-bucket manifest, ``hls.load(path)`` boots it back without
+re-compiling, and ``design.engine()`` fronts it with the async
+adaptive-batching engine (``repro.serving.design_engine``).
+
 ``repro.core`` stays importable as the stable internal layer; this
 package adds no compiler logic, only the front door.
 """
 
 from repro.core.pipeline import CompiledDesign, CompilerConfig
-from repro.hls.api import (Design, ServeReport, Session, compile, trace,
-                           _default_session)
+from repro.hls.api import (Design, ServeReport, Session, compile, load,
+                           trace, _default_session)
 from repro.nn.graph import ModuleGraph
 
 __all__ = [
     "compile",
+    "load",
     "trace",
     "Design",
     "Session",

@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from pathlib import Path
-from typing import Any, Callable, Iterable, Optional, Union
+from typing import Any, Callable, Iterable, Optional, Sequence, Union
 
 import numpy as np
 
@@ -44,6 +44,13 @@ def _as_program(model: Model):
         f"(Context -> None) or a traced Graph, got {type(model).__name__}")
 
 
+def _np_tree(tree):
+    """Nested dict of arrays -> numpy (stable pickling for artifacts)."""
+    if isinstance(tree, dict):
+        return {k: _np_tree(v) for k, v in tree.items()}
+    return np.asarray(tree)
+
+
 def _default_name(model: Model, module: Optional[ModuleGraph]) -> str:
     if module is not None:
         return module.name
@@ -59,7 +66,14 @@ def _default_name(model: Model, module: Optional[ModuleGraph]) -> str:
 
 @dataclasses.dataclass
 class ServeReport:
-    """Throughput accounting for one :meth:`Design.serve` run."""
+    """Throughput accounting for one :meth:`Design.serve` run.
+
+    Carries the same tail-latency/queue-depth fields as the async
+    engine's ``EngineReport`` (``repro.serving.design_engine``), so the
+    synchronous and async serving paths are comparable in one table.  For
+    this caller-driven loop the queue depth is always 0 — there is no
+    queue; the percentiles are over per-batch dispatch latencies.
+    """
 
     backend: str
     fmt: Optional[str]
@@ -74,6 +88,13 @@ class ServeReport:
     served: Optional[str] = None
     #: per-group / per-node tensor-path fallbacks the Pallas lowering took
     fallbacks: list = dataclasses.field(default_factory=list)
+    #: per-batch dispatch-latency percentiles (milliseconds)
+    p50_ms: float = 0.0
+    p95_ms: float = 0.0
+    p99_ms: float = 0.0
+    #: always 0 for the sync loop; the async engine reports real depths
+    max_queue_depth: int = 0
+    mean_queue_depth: float = 0.0
 
     @property
     def us_per_sample(self) -> float:
@@ -84,8 +105,9 @@ class ServeReport:
             f"({self.fmt.replace('_', ',')})"
         served = self.served or self.backend
         return (f"served {self.samples} samples in {self.batches} batches: "
-                f"{self.us_per_sample:.2f} us/sample "
-                f"[{served} backend, {fmt}; "
+                f"{self.us_per_sample:.2f} us/sample, batch p50 "
+                f"{self.p50_ms:.2f} / p95 {self.p95_ms:.2f} / p99 "
+                f"{self.p99_ms:.2f} ms [{served} backend, {fmt}; "
                 f"warm-up {self.warmup_s:.2f}s]")
 
 
@@ -116,6 +138,8 @@ class Design:
         self._program = program
         self._module = module
         self._tuned_candidate = tuned_candidate
+        #: warmed-bucket manifest when this design came from ``hls.load``
+        self.manifest: Optional[dict] = None
         self.example_inputs = example_inputs
         if example_inputs is not None:           # early shape validation
             if isinstance(example_inputs, dict):
@@ -389,6 +413,52 @@ class Design:
             backend = ("tensor" if self._module is not None
                        and self._module.forward_fn is not None
                        and self._module.params is not None else "simd")
+        run_one, served, fallbacks = self._runner(backend, fmt, pallas_kw)
+
+        report = ServeReport(backend=backend, fmt=fmt,
+                             outputs=[] if collect else None,
+                             served=served, fallbacks=fallbacks)
+        it = iter(batch_iter)
+        try:
+            first = next(it)
+        except StopIteration:
+            return report
+        t0 = time.perf_counter()
+        jax.block_until_ready(run_one(first))        # compile + warm
+        report.warmup_s = time.perf_counter() - t0
+
+        import itertools
+        batch_s: list[float] = []
+        for i, x in enumerate(itertools.chain((first,), it)):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(run_one(x))
+            batch_s.append(time.perf_counter() - t0)
+            report.wall_s += batch_s[-1]
+            report.batches += 1
+            report.samples += self._batch_size(x)
+            if on_batch is not None:
+                on_batch(i, out)
+            if collect:
+                report.outputs.append(out)
+        from repro.serving.common import percentiles
+        pct = percentiles(batch_s)
+        report.p50_ms = pct["p50"] * 1e3
+        report.p95_ms = pct["p95"] * 1e3
+        report.p99_ms = pct["p99"] * 1e3
+        return report
+
+    def _runner(self, backend: str, fmt: Optional[str],
+                pallas_kw: Optional[dict]):
+        """``(run_one, served, fallbacks)`` for one serving backend.
+
+        ``run_one`` takes one batch — a bare input array or a feed dict
+        for ``simd``/``pallas`` (module weights merged via :meth:`feeds`),
+        the fused forward's ``(B, ...)`` array for ``tensor`` — and
+        returns the outputs.  Shared by :meth:`serve` and the async
+        :class:`~repro.serving.design_engine.DesignEngine`, so both paths
+        serve through identical compiled programs.
+        """
+        import jax
         served = None
         fallbacks: list = []
         if backend == "tensor":
@@ -419,31 +489,85 @@ class Design:
         else:
             raise ValueError(f"unknown backend {backend!r} "
                              f"(expected 'tensor', 'simd' or 'pallas')")
+        return run_one, served, fallbacks
 
-        report = ServeReport(backend=backend, fmt=fmt,
-                             outputs=[] if collect else None,
-                             served=served, fallbacks=fallbacks)
-        it = iter(batch_iter)
-        try:
-            first = next(it)
-        except StopIteration:
-            return report
-        t0 = time.perf_counter()
-        jax.block_until_ready(run_one(first))        # compile + warm
-        report.warmup_s = time.perf_counter() - t0
+    def engine(self, **kw):
+        """An async adaptive-batching engine over this design.
 
-        import itertools
-        for i, x in enumerate(itertools.chain((first,), it)):
-            t0 = time.perf_counter()
-            out = jax.block_until_ready(run_one(x))
-            report.wall_s += time.perf_counter() - t0
-            report.batches += 1
-            report.samples += self._batch_size(x)
-            if on_batch is not None:
-                on_batch(i, out)
-            if collect:
-                report.outputs.append(out)
-        return report
+        Returns a :class:`repro.serving.design_engine.DesignEngine`:
+        requests queue and dispatch in bucket-snapped pre-warmed batches
+        (size or deadline trigger), with fault-tolerant replica restart.
+        ``backend``/``fmt``/``buckets`` default from the saved artifact's
+        manifest when this design came from :func:`load`; pass
+        ``artifact_path=`` so replica restarts warm-boot from disk.  All
+        :class:`DesignEngine` keywords forward.
+        """
+        from repro.serving.design_engine import DesignEngine
+        manifest = self.manifest or {}
+        for key in ("backend", "fmt"):
+            if kw.get(key) is None and manifest.get(key) is not None:
+                kw[key] = manifest[key]
+        # the saved warmed-bucket set only defaults when the caller pinned
+        # neither buckets nor max_batch — an explicit max_batch must win
+        # (the engine derives its buckets from it)
+        if kw.get("buckets") is None and "max_batch" not in kw \
+                and manifest.get("buckets"):
+            kw["buckets"] = manifest["buckets"]
+        if kw.get("artifact_path") is None and manifest.get("path"):
+            kw["artifact_path"] = manifest["path"]
+        return DesignEngine(self, **kw)
+
+    # -- persistence (warm-boot artifacts) -----------------------------------
+
+    def save(self, path: Union[str, Path], *,
+             buckets: Optional[Sequence[int]] = None,
+             backend: Optional[str] = None,
+             fmt: Optional[str] = None) -> Path:
+        """Persist a warm-boot artifact: design + weights + bucket manifest.
+
+        The artifact bundles the full ``CompiledDesign`` (graphs, schedule,
+        pass reports), the bound module with its trained params (numpy-
+        ified; an unpicklable ``forward_fn`` is dropped, disabling only the
+        tensor backend), the example inputs, and a serving manifest
+        (``buckets``/``backend``/``fmt`` defaults for :meth:`engine`).
+        :func:`load` boots a replica from it without re-tracing or
+        re-running passes — and the engine's restart path re-loads it when
+        a replica is poisoned.  Written through the versioned pickle layer
+        (:func:`repro.core.pipeline.save_artifact`), so format bumps
+        invalidate saved artifacts loudly.
+        """
+        from repro.core.pipeline import save_artifact
+        module = self._module
+        module_payload = None
+        if module is not None:
+            params = _np_tree(module.params) \
+                if module.params is not None else None
+            fwd = module.forward_fn
+            if fwd is not None:
+                import pickle
+                try:
+                    pickle.dumps(fwd)
+                except Exception:
+                    fwd = None      # lambda forward: artifact serves via
+                    #                 simd/pallas only
+            module_payload = ModuleGraph(
+                module.name, module.input_shape, module.nodes,
+                input_name=module.input_name, params=params,
+                forward_fn=fwd, meta=module.meta)
+        if buckets is None:
+            from repro.serving.design_engine import default_buckets
+            buckets = default_buckets(32)
+        manifest = {"buckets": list(buckets), "backend": backend,
+                    "fmt": fmt, "name": self.name,
+                    "design_hash": self.design_hash,
+                    "fingerprint": self.fingerprint}
+        example = self.example_inputs
+        if example is not None:
+            example = _np_tree(example) if isinstance(example, dict) \
+                else np.asarray(example)
+        return save_artifact(path, {
+            "design": self._compiled, "module": module_payload,
+            "example_inputs": example, "manifest": manifest})
 
     # -- reporting ----------------------------------------------------------
 
@@ -583,6 +707,32 @@ def compile(model: Model, *, name: Optional[str] = None,
     s = session if session is not None else _default_session(cache)
     return s.compile(model, name=name, config=config,
                      example_inputs=example_inputs, tuned=tuned, db=db)
+
+
+def load(path: Union[str, Path], *,
+         session: Optional[Session] = None) -> Design:
+    """Warm-boot a :class:`Design` from a ``Design.save`` artifact.
+
+    No re-trace, no passes, no scheduling: the pickled ``CompiledDesign``
+    (plus the bound module weights and example inputs) is rehydrated as-is,
+    so a replica serves its first request after one disk read — the
+    cold-boot-vs-warm-boot gap ``benchmarks/bench_serving.py`` measures.
+    The artifact's warmed-bucket manifest rides along on
+    ``design.manifest`` and defaults :meth:`Design.engine`'s
+    backend/fmt/buckets; the manifest also remembers this path, so engine
+    replica restarts re-load from it automatically.
+    """
+    from repro.core.pipeline import load_artifact
+    record = load_artifact(path)
+    s = session if session is not None else _default_session()
+    compiled = record["design"]
+    design = Design(compiled, s, module=record.get("module"),
+                    example_inputs=record.get("example_inputs"))
+    design.manifest = dict(record.get("manifest") or {})
+    design.manifest["path"] = str(path)
+    # seed the session's design cache: a warm boot also warms recompiles
+    s.driver.cache.memory.setdefault(compiled.design_hash, compiled)
+    return design
 
 
 def trace(model: Model, *, forward: bool = True) -> Graph:

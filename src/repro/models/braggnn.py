@@ -12,6 +12,7 @@ Used three ways:
 
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -64,9 +65,11 @@ def build(s: int = 1, img: int = 11, *, params=None,
             nodes.append(nng.ReLU(out_name_=f"dense_{li}_relu",
                                   label_=f"dense.{li}.relu"))
     nodes.append(nng.OutputReLU(label_="dense.final_relu"))
+    # functools.partial (not a lambda) keeps the module picklable, which is
+    # what lets Design.save persist the tensor serving backend
     return nng.ModuleGraph(
         "braggnn", (1, 1, img, img), nodes, params=params,
-        forward_fn=lambda p, x, fmt=None: forward(p, x, s=s, fmt=fmt),
+        forward_fn=functools.partial(forward, s=s),
         meta={"s": s, "img": img})
 
 

@@ -15,6 +15,12 @@ and layers three protections around it:
     preemptive re-scheduling / hot-spare promotion).
   * **failure injection** — ``FailureInjector`` raises at configured steps,
     used by the integration tests to prove the restart path.
+
+``FailureInjector`` and ``StepWatchdog`` are deliberately generic: the
+serving engines (``repro.serving.design_engine``) wire the same pair
+around their dispatch loop, so a poisoned replica restarts from its saved
+artifact with in-flight requests re-queued — the serving twin of the
+checkpoint/restart discipline here.
 """
 
 from __future__ import annotations
@@ -31,7 +37,12 @@ from repro.data.pipeline import SyntheticTokenPipeline
 
 
 class FailureInjector:
-    """Raises RuntimeError at each step in ``fail_at`` exactly once."""
+    """Raises RuntimeError at each step in ``fail_at`` exactly once.
+
+    Shared by the training driver (step index) and the serving engines
+    (dispatch index): both call ``check`` once per unit of work, so tests
+    can poison a specific step/dispatch and assert the restart path.
+    """
 
     def __init__(self, fail_at: tuple[int, ...] = ()):
         self.remaining = set(fail_at)
@@ -42,6 +53,37 @@ class FailureInjector:
             self.remaining.discard(step)
             self.fired.append(step)
             raise RuntimeError(f"injected failure at step {step}")
+
+
+class StepWatchdog:
+    """Flags steps slower than ``deadline_factor`` x the running median.
+
+    The straggler detector both the training driver and the serving
+    engines layer around their work loop: feed each step's wall time to
+    :meth:`observe`; once ``min_history`` durations are recorded, a step
+    beyond ``deadline_factor`` times the median of the last ``window``
+    durations (including the current one) is recorded in ``stragglers``.
+    On real pods this is the signal for preemptive re-scheduling /
+    hot-spare promotion; here it is telemetry in the reports.
+    """
+
+    def __init__(self, deadline_factor: float = 3.0, *, window: int = 20,
+                 min_history: int = 5):
+        self.deadline_factor = deadline_factor
+        self.window = window
+        self.min_history = min_history
+        self.durations: list[float] = []
+        self.stragglers: list[int] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Record one step duration; True when it is a straggler."""
+        self.durations.append(dt)
+        if len(self.durations) >= self.min_history:
+            med = statistics.median(self.durations[-self.window:])
+            if dt > self.deadline_factor * med:
+                self.stragglers.append(step)
+                return True
+        return False
 
 
 @dataclasses.dataclass
@@ -76,9 +118,8 @@ class TrainingDriver:
         state = {"params": params, "opt": opt_state}
         start_step = 0
         restarts = 0
-        stragglers: list[int] = []
         losses: list[float] = []
-        durations: list[float] = []
+        watchdog = StepWatchdog(self.cfg.deadline_factor)
         metrics: dict = {}
 
         while True:
@@ -94,12 +135,7 @@ class TrainingDriver:
                     jax.block_until_ready(metrics["loss"])
                     state = {"params": new_params, "opt": new_opt}
                     losses.append(float(metrics["loss"]))
-                    dt = time.monotonic() - t0
-                    durations.append(dt)
-                    if len(durations) >= 5:
-                        med = statistics.median(durations[-20:])
-                        if dt > self.cfg.deadline_factor * med:
-                            stragglers.append(step)
+                    watchdog.observe(step, time.monotonic() - t0)
                     step += 1
                     if step % self.cfg.checkpoint_every == 0:
                         self.ckpt.save_async(step, state)
@@ -119,7 +155,8 @@ class TrainingDriver:
                         self.ckpt.restore(state, latest)[0], latest)
         self.pipeline.stop()
         return DriverReport(steps_run=self.cfg.total_steps,
-                            restarts=restarts, straggler_steps=stragglers,
+                            restarts=restarts,
+                            straggler_steps=watchdog.stragglers,
                             final_metrics={k: float(v)
                                            for k, v in metrics.items()},
                             losses=losses)

@@ -1,3 +1,24 @@
+"""Serving engines: LM continuous batching + compiled-Design request engine.
+
+Two engines over one set of queue/latency helpers (``repro.serving.common``):
+
+- :class:`ServingEngine` — lane-based continuous batching for LM decode.
+- :class:`DesignEngine` — async adaptive batching over a compiled
+  :class:`repro.hls.Design` with warm-boot restarts (``repro.hls.load``)
+  and fault-tolerant request re-queuing.
+"""
+
+from repro.serving.common import QueuedRequest, RequestQueue, percentiles
+from repro.serving.design_engine import DesignEngine, EngineReport, default_buckets
 from repro.serving.engine import Request, ServingEngine
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = [
+    "DesignEngine",
+    "EngineReport",
+    "QueuedRequest",
+    "Request",
+    "RequestQueue",
+    "ServingEngine",
+    "default_buckets",
+    "percentiles",
+]

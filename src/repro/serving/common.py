@@ -1,0 +1,166 @@
+"""Queue/lane bookkeeping shared by both serving engines.
+
+The LM continuous-batching engine (:mod:`repro.serving.engine`) and the
+compiled-``Design`` request engine (:mod:`repro.serving.design_engine`)
+need the same machinery: request identity + lifecycle timestamps, a
+thread-safe FIFO with depth telemetry, and tail-latency percentiles.  It
+lives here once instead of being copy-pasted per engine; nothing in this
+module imports models, configs or the compiler, so either engine can be
+used standalone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+
+def percentiles(values: Sequence[float],
+                pcts: Sequence[int] = (50, 95, 99)) -> dict[str, float]:
+    """``{"p50": ..., "p95": ..., "p99": ...}`` over ``values`` (0.0 when
+    empty) — the tail-latency summary both serve reports share."""
+    if not len(values):
+        return {f"p{p}": 0.0 for p in pcts}
+    arr = np.asarray(values, dtype=np.float64)
+    return {f"p{p}": float(np.percentile(arr, p)) for p in pcts}
+
+
+@dataclasses.dataclass
+class QueuedRequest:
+    """One queued unit of work plus its lifecycle timestamps.
+
+    ``payload`` is engine-defined (an input sample for the design engine, a
+    token prompt for the LM engine).  The submit/start/done timestamps give
+    per-request latency; ``retries`` counts re-queues after a replica
+    failure.  ``wait()``/``ready`` make the request its own future: the
+    dispatching engine fills ``result`` (or ``error``) and sets the event.
+    """
+
+    rid: int
+    payload: Any
+    submit_t: float = 0.0
+    start_t: float = 0.0
+    done_t: float = 0.0
+    retries: int = 0
+    result: Any = None
+    error: Optional[BaseException] = None
+    _done: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False)
+
+    @property
+    def ready(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> Any:
+        """Block until the engine finished this request; returns the result
+        (re-raising the engine-side error, if any)."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not done "
+                               f"after {timeout}s")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+    def finish(self, result: Any = None,
+               error: Optional[BaseException] = None) -> None:
+        self.done_t = time.monotonic()
+        self.result = result
+        self.error = error
+        self._done.set()
+
+    @property
+    def latency_s(self) -> float:
+        return self.done_t - self.submit_t if self.done_t else 0.0
+
+
+class RequestQueue:
+    """Thread-safe FIFO of :class:`QueuedRequest` with depth telemetry.
+
+    Owns rid assignment and the submit timestamp so every engine reports
+    comparable latencies.  ``depth_samples`` records the queue depth at
+    each submit/pop — max/mean queue depth is the load-generator-facing
+    congestion signal.  ``requeue_front`` puts a failed batch back at the
+    head *in order*, which is what keeps replica restarts from dropping
+    or reordering in-flight requests.
+    """
+
+    def __init__(self):
+        self._items: list[QueuedRequest] = []
+        self._cond = threading.Condition()
+        self._next_rid = 0
+        self.submitted = 0
+        self.depth_samples: list[int] = []
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._items)
+
+    def submit(self, payload: Any) -> QueuedRequest:
+        return self.push(QueuedRequest(rid=-1, payload=payload))
+
+    def push(self, req: QueuedRequest) -> QueuedRequest:
+        """Enqueue a pre-built request (engines subclass
+        :class:`QueuedRequest` with their own fields); the queue owns rid
+        assignment and the submit timestamp."""
+        with self._cond:
+            req.rid = self._next_rid
+            req.submit_t = time.monotonic()
+            self._next_rid += 1
+            self._items.append(req)
+            self.submitted += 1
+            self.depth_samples.append(len(self._items))
+            self._cond.notify_all()
+            return req
+
+    def pop(self) -> Optional[QueuedRequest]:
+        """Pop the oldest request (None when empty)."""
+        batch = self.pop_batch(1)
+        return batch[0] if batch else None
+
+    def pop_batch(self, n: int) -> list[QueuedRequest]:
+        """Pop up to ``n`` requests preserving FIFO order."""
+        with self._cond:
+            taken, self._items = self._items[:n], self._items[n:]
+            if taken:
+                self.depth_samples.append(len(self._items))
+            return taken
+
+    def requeue_front(self, reqs: Sequence[QueuedRequest]) -> None:
+        """Put ``reqs`` back at the head (in the given order) after a
+        replica failure; bumps each request's retry counter."""
+        with self._cond:
+            for r in reqs:
+                r.retries += 1
+            self._items[:0] = list(reqs)
+            self._cond.notify_all()
+
+    def oldest_age_s(self) -> Optional[float]:
+        """Age of the head request (None when empty) — the deadline
+        trigger's input."""
+        with self._cond:
+            if not self._items:
+                return None
+            return time.monotonic() - self._items[0].submit_t
+
+    def wait_for_work(self, timeout: Optional[float] = None) -> bool:
+        """Block until the queue is non-empty (or timeout); True if work."""
+        with self._cond:
+            if self._items:
+                return True
+            self._cond.wait(timeout)
+            return bool(self._items)
+
+    # -- telemetry ----------------------------------------------------------
+
+    @property
+    def max_depth(self) -> int:
+        return max(self.depth_samples, default=0)
+
+    @property
+    def mean_depth(self) -> float:
+        return (float(np.mean(self.depth_samples))
+                if self.depth_samples else 0.0)

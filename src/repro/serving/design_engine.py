@@ -1,0 +1,381 @@
+"""Async request-queue serving engine over compiled ``Design`` artifacts.
+
+``Design.serve`` is a warmed *synchronous* loop: the caller owns batching
+and blocks per batch.  This engine is the deployment-shaped front: callers
+:meth:`~DesignEngine.submit` single samples from any thread; a dispatcher
+accumulates them in a thread-safe queue and fires a batch when either
+
+  * **size trigger** — the queue reaches the largest bucket, or
+  * **deadline trigger** — the oldest request has waited ``max_delay_ms``
+
+whichever comes first.  Dispatched batch sizes are snapped to a small set
+of pre-warmed **bucket** shapes (padding up to the next bucket when a
+deadline flush catches a partial batch), so every dispatch hits an
+already-jitted program — no recompiles on the hot path, the OpenHLS
+static-shape discipline applied to serving.
+
+Fault tolerance wires :mod:`repro.runtime.fault` in: an optional
+``FailureInjector`` poisons chosen dispatches (tests), any dispatch
+exception triggers a replica restart — re-booting from the saved
+``Design.save`` artifact when ``artifact_path`` is given — and the failed
+batch is re-queued at the head *in order*, so no request is dropped and a
+drained rerun is bit-identical to an uninterrupted one.  A
+``StepWatchdog`` records straggler dispatches.
+
+All three emission backends serve: ``tensor`` (fused jit forward),
+``simd`` (emitted design), ``pallas`` (compiled rendering).  The engine
+reports sustained QPS, p50/p95/p99 latency and queue depth — the numbers
+``benchmarks/bench_serving.py`` tracks instead of µs/sample-in-a-warm-loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from pathlib import Path
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.runtime.fault import FailureInjector, StepWatchdog
+from repro.serving.common import QueuedRequest, RequestQueue, percentiles
+
+
+def default_buckets(max_batch: int) -> tuple[int, ...]:
+    """Powers of two up to ``max_batch`` (plus ``max_batch`` itself): the
+    pre-warmed dispatch shapes."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    buckets = []
+    b = 1
+    while b < max_batch:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_batch)
+    return tuple(buckets)
+
+
+@dataclasses.dataclass
+class EngineReport:
+    """Telemetry of one :class:`DesignEngine` lifetime.
+
+    Comparable with :class:`repro.hls.ServeReport` — both carry
+    p50/p95/p99 latency and queue-depth fields, so the sync and async
+    serving paths land in one table.
+    """
+
+    backend: str
+    fmt: Optional[str]
+    #: last replica boot time (runner build + bucket warm-up), seconds
+    boot_s: float = 0.0
+    #: source of every replica boot, in order: "memory" or "artifact"
+    boots: list = dataclasses.field(default_factory=list)
+    submitted: int = 0
+    completed: int = 0
+    dropped: int = 0
+    retried: int = 0
+    restarts: int = 0
+    dispatches: int = 0
+    #: bucket size -> dispatch count
+    batch_hist: dict = dataclasses.field(default_factory=dict)
+    padded_samples: int = 0
+    wall_s: float = 0.0
+    qps: float = 0.0
+    p50_ms: float = 0.0
+    p95_ms: float = 0.0
+    p99_ms: float = 0.0
+    mean_ms: float = 0.0
+    max_queue_depth: int = 0
+    mean_queue_depth: float = 0.0
+    straggler_dispatches: list = dataclasses.field(default_factory=list)
+    #: what actually served (the Pallas plan summary when applicable)
+    served: Optional[str] = None
+    fallbacks: list = dataclasses.field(default_factory=list)
+
+    def summary(self) -> str:
+        fmt = "fp32" if self.fmt in (None, "fp32") else \
+            f"({self.fmt.replace('_', ',')})"
+        hist = ", ".join(f"{b}x{n}" for b, n in sorted(self.batch_hist.items()))
+        return (f"served {self.completed}/{self.submitted} requests @ "
+                f"{self.qps:.1f} req/s: p50 {self.p50_ms:.2f} / "
+                f"p95 {self.p95_ms:.2f} / p99 {self.p99_ms:.2f} ms "
+                f"[{self.served or self.backend} backend, {fmt}; "
+                f"{self.dispatches} dispatches ({hist}), "
+                f"max queue {self.max_queue_depth}, "
+                f"{self.restarts} restarts, {self.dropped} dropped; "
+                f"boot {self.boot_s:.2f}s]")
+
+
+class DesignEngine:
+    """Adaptive-batching request engine fronting one compiled ``Design``.
+
+    Construct via :meth:`repro.hls.Design.engine` (which defaults
+    ``backend``/``fmt``/``buckets`` from the saved artifact's warmed-bucket
+    manifest when the design was loaded with ``hls.load``).
+
+    Two run modes:
+
+      * **threaded** — ``start()`` (or the context manager) spawns the
+        dispatcher; ``submit`` from any thread; ``stop()`` drains and
+        joins.  The open-loop load generators drive this mode.
+      * **synchronous** — without ``start()``, ``submit`` everything and
+        call :meth:`run_until_drained`; dispatch grouping is then
+        deterministic (head-of-queue batches of ``min(pending,
+        max_batch)``), which is what the bit-identity tests rely on.
+    """
+
+    def __init__(self, design, *, backend: Optional[str] = None,
+                 fmt: Optional[str] = None,
+                 buckets: Optional[Sequence[int]] = None,
+                 max_batch: int = 32, max_delay_ms: float = 2.0,
+                 artifact_path: Optional[Union[str, Path]] = None,
+                 injector: Optional[FailureInjector] = None,
+                 watchdog: Optional[StepWatchdog] = None,
+                 max_restarts: int = 4, max_retries: int = 2,
+                 pallas_kw: Optional[dict] = None, warm: bool = True):
+        if backend is None:
+            module = design.module
+            backend = ("tensor" if module is not None
+                       and module.forward_fn is not None
+                       and module.params is not None else "simd")
+        self.backend = backend
+        self.fmt = fmt
+        self.buckets = (tuple(sorted(set(int(b) for b in buckets)))
+                        if buckets else default_buckets(max_batch))
+        if self.buckets[0] < 1:
+            raise ValueError(f"bucket sizes must be >= 1: {self.buckets}")
+        self.max_batch = self.buckets[-1]
+        self.max_delay_s = max_delay_ms * 1e-3
+        self.artifact_path = Path(artifact_path) if artifact_path else None
+        self.injector = injector or FailureInjector()
+        self.watchdog = watchdog or StepWatchdog()
+        self.max_restarts = max_restarts
+        self.max_retries = max_retries
+        self.pallas_kw = dict(pallas_kw or {})
+
+        self._design = design
+        self._input_name, self._input_shape = design._input_memref()
+        if backend == "tensor" and self._input_shape[0] != 1:
+            raise ValueError(
+                f"tensor backend batches over the memref's leading "
+                f"singleton axis; input {self._input_name!r} has shape "
+                f"{self._input_shape}")
+        self._queue = RequestQueue()
+        self._finished: list[QueuedRequest] = []
+        self._report = EngineReport(backend=backend, fmt=fmt)
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+        self._run_one = None
+        if warm:
+            self._boot("memory")
+
+    # -- replica lifecycle --------------------------------------------------
+
+    def _boot(self, source: str) -> float:
+        """(Re)build the serving replica and warm every bucket shape.
+
+        ``source='artifact'`` re-loads the design from ``artifact_path``
+        (the warm-boot path a restarted replica takes); ``'memory'``
+        rebuilds from the in-process design.  Returns the boot wall time.
+        """
+        import jax
+        t0 = time.perf_counter()
+        if source == "artifact":
+            import repro.hls as hls
+            self._design = hls.load(self.artifact_path)
+        self._run_one, served, fallbacks = self._design._runner(
+            self.backend, self.fmt, self.pallas_kw)
+        self._report.served = served
+        self._report.fallbacks = list(fallbacks)
+        for b in self.buckets:                       # pre-warm every shape
+            zeros = np.zeros((b,) + self._input_shape, np.float32)
+            jax.block_until_ready(self._run_one(self._as_backend_batch(zeros)))
+        boot_s = time.perf_counter() - t0
+        self._report.boot_s = boot_s
+        self._report.boots.append(source)
+        return boot_s
+
+    # -- submission ---------------------------------------------------------
+
+    def _coerce_sample(self, x) -> np.ndarray:
+        arr = np.asarray(x, dtype=np.float32)
+        shape = self._input_shape
+        if arr.shape == tuple(shape):
+            return arr
+        if shape[0] == 1 and arr.shape == tuple(shape)[1:]:
+            return arr[None]
+        raise ValueError(
+            f"sample shape {arr.shape} does not match input memref "
+            f"{self._input_name!r} shape {tuple(shape)}")
+
+    def submit(self, x) -> QueuedRequest:
+        """Enqueue one sample; returns the request (its own future —
+        ``req.wait()`` blocks for the per-sample output)."""
+        if self._stop_evt.is_set():
+            raise RuntimeError("engine is stopped")
+        req = self._queue.submit(self._coerce_sample(x))
+        if self._t_first is None:
+            self._t_first = req.submit_t
+        return req
+
+    def submit_many(self, xs) -> list[QueuedRequest]:
+        return [self.submit(x) for x in xs]
+
+    # -- dispatch -----------------------------------------------------------
+
+    def _as_backend_batch(self, stacked: np.ndarray):
+        """A (bucket,)+memref batch -> what this backend's runner takes."""
+        if self.backend == "tensor":
+            # collapse the memref's per-sample singleton batch axis into
+            # the throughput batch (the fused forward is (B, C, H, W))
+            return stacked.reshape(stacked.shape[0],
+                                   *self._input_shape[1:])
+        return stacked        # simd/pallas runners coerce via design.feeds
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.max_batch
+
+    def _split(self, out, i: int):
+        if isinstance(out, dict):
+            return {k: np.asarray(v)[i] for k, v in out.items()}
+        return np.asarray(out)[i]
+
+    def _dispatch(self, reqs: list[QueuedRequest]) -> None:
+        """Run one snapped batch; on failure, restart the replica and
+        re-queue the batch at the head (never dropped, never reordered)."""
+        import jax
+        rep = self._report
+        idx = rep.dispatches
+        rep.dispatches += 1
+        bucket = self._bucket_for(len(reqs))
+        now = time.monotonic()
+        for r in reqs:
+            r.start_t = now
+        stacked = np.stack([r.payload for r in reqs])
+        if bucket > len(reqs):
+            rep.padded_samples += bucket - len(reqs)
+            pad = np.zeros((bucket - len(reqs),) + self._input_shape,
+                           np.float32)
+            stacked = np.concatenate([stacked, pad])
+        t0 = time.perf_counter()
+        try:
+            self.injector.check(idx)
+            out = jax.block_until_ready(
+                self._run_one(self._as_backend_batch(stacked)))
+        except Exception as exc:
+            rep.restarts += 1
+            if rep.restarts > self.max_restarts:
+                for r in reqs:
+                    r.finish(error=exc)
+                rep.dropped += len(reqs)
+                self._finished.extend(reqs)
+                return
+            keep = [r for r in reqs if r.retries < self.max_retries]
+            for r in reqs:
+                if r.retries >= self.max_retries:
+                    r.finish(error=exc)
+                    rep.dropped += 1
+                    self._finished.append(r)
+            rep.retried += len(keep)
+            self._queue.requeue_front(keep)
+            self._boot("artifact" if self.artifact_path else "memory")
+            return
+        dt = time.perf_counter() - t0
+        self.watchdog.observe(idx, dt)
+        rep.batch_hist[bucket] = rep.batch_hist.get(bucket, 0) + 1
+        for i, r in enumerate(reqs):
+            r.finish(result=self._split(out, i))
+        rep.completed += len(reqs)
+        self._finished.extend(reqs)
+        self._t_last = time.monotonic()
+
+    def _dispatch_ready(self, *, flush: bool) -> bool:
+        """Dispatch one batch if a trigger fired; True when work was done.
+
+        Size trigger: pending >= the largest bucket (dispatched unpadded).
+        Deadline trigger (or ``flush``): oldest request waited past
+        ``max_delay_ms`` — dispatch what is pending, padded up to the next
+        bucket so the shape is pre-warmed.
+        """
+        n = len(self._queue)
+        if n == 0:
+            return False
+        if n < self.max_batch and not flush:
+            age = self._queue.oldest_age_s()
+            if age is None or age < self.max_delay_s:
+                return False
+        reqs = self._queue.pop_batch(min(n, self.max_batch))
+        if reqs:
+            self._dispatch(reqs)
+        return bool(reqs)
+
+    def run_until_drained(self) -> None:
+        """Synchronous mode: dispatch head-of-queue batches until empty."""
+        while self._dispatch_ready(flush=True):
+            pass
+
+    # -- threaded mode ------------------------------------------------------
+
+    def _loop(self) -> None:
+        while True:
+            if self._stop_evt.is_set():
+                if not self._dispatch_ready(flush=True):
+                    return
+                continue
+            if not self._queue.wait_for_work(timeout=0.005):
+                continue
+            if not self._dispatch_ready(flush=False):
+                # a partial batch inside its deadline window: sleep a
+                # slice, re-check (the queue may reach the size trigger)
+                age = self._queue.oldest_age_s()
+                if age is not None:
+                    time.sleep(max(0.0, min(self.max_delay_s - age, 1e-3)))
+
+    def start(self) -> "DesignEngine":
+        if self._thread is not None:
+            raise RuntimeError("engine already started")
+        self._thread = threading.Thread(target=self._loop,
+                                        name="design-engine", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain the queue, then stop the dispatcher."""
+        self._stop_evt.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        else:
+            self.run_until_drained()
+
+    def __enter__(self) -> "DesignEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self) -> EngineReport:
+        rep = self._report
+        rep.submitted = self._queue.submitted
+        lats = [r.latency_s for r in self._finished if r.error is None]
+        pct = percentiles(lats)
+        rep.p50_ms = pct["p50"] * 1e3
+        rep.p95_ms = pct["p95"] * 1e3
+        rep.p99_ms = pct["p99"] * 1e3
+        rep.mean_ms = float(np.mean(lats)) * 1e3 if lats else 0.0
+        rep.max_queue_depth = self._queue.max_depth
+        rep.mean_queue_depth = round(self._queue.mean_depth, 2)
+        rep.straggler_dispatches = list(self.watchdog.stragglers)
+        if self._t_first is not None and self._t_last is not None \
+                and self._t_last > self._t_first:
+            rep.wall_s = self._t_last - self._t_first
+            rep.qps = rep.completed / rep.wall_s
+        return rep

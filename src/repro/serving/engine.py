@@ -1,4 +1,4 @@
-"""Batched serving engine with continuous batching.
+"""LM continuous-batching engine: lanes over one jitted decode step.
 
 A fixed pool of ``max_batch`` lanes shares one jitted decode step (one
 token per lane per tick).  Requests queue; a free lane prefill-feeds the
@@ -12,34 +12,41 @@ Per-lane state lives in the batched KV cache; lane resets write zeros into
 that lane's slice.  Works with every decoder architecture in the registry
 (KV, rolling-window, RG-LRU / xLSTM recurrent state) because the cache
 layout is the model's own.
+
+Queue/request bookkeeping and the latency percentiles are the shared
+:mod:`repro.serving.common` machinery — the same helpers back the
+compiled-``Design`` request engine (:mod:`repro.serving.design_engine`).
+The default decode step comes from ``models.lm.serve_step``, imported
+lazily at construction; pass ``step_fn`` to drive a pure-decode stack
+without importing the LM model code at all.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Optional
+from typing import TYPE_CHECKING, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.models import lm
 from repro.nn import transformer
+from repro.serving.common import QueuedRequest, RequestQueue, percentiles
+
+if TYPE_CHECKING:                                    # annotation-only import
+    from repro.configs.base import ModelConfig
 
 
 @dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: list[int]
-    max_new_tokens: int
+class Request(QueuedRequest):
+    """One generation request: shared lifecycle + LM-specific fields."""
+
+    prompt: list = dataclasses.field(default_factory=list)
+    max_new_tokens: int = 32
     eos_id: int = -1               # -1: no early stop
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
-    submit_t: float = 0.0
     first_token_t: float = 0.0
-    done_t: float = 0.0
 
 
 @dataclasses.dataclass
@@ -50,35 +57,32 @@ class _Lane:
 
 
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
-                 max_len: int = 512):
+    def __init__(self, cfg: "ModelConfig", params, *, max_batch: int = 8,
+                 max_len: int = 512, step_fn: Optional[Callable] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.cache = transformer.init_cache(cfg, max_batch, max_len)
         self.lanes = [_Lane() for _ in range(max_batch)]
-        self.queue: list[Request] = []
+        self.queue = RequestQueue()
         self.finished: list[Request] = []
-        self._next_rid = 0
-        self._step = jax.jit(
-            lambda p, t, c, q: lm.serve_step(cfg, p, t, c, q))
+        if step_fn is None:
+            from repro.models import lm
+            step_fn = lambda p, t, c, q: lm.serve_step(cfg, p, t, c, q)
+        self._step = jax.jit(step_fn)
         self._ticks = 0
 
     # -- API -----------------------------------------------------------------
 
     def submit(self, prompt: list[int], max_new_tokens: int = 32,
                eos_id: int = -1) -> int:
-        rid = self._next_rid
-        self._next_rid += 1
-        req = Request(rid=rid, prompt=list(prompt),
-                      max_new_tokens=max_new_tokens, eos_id=eos_id,
-                      submit_t=time.monotonic())
-        self.queue.append(req)
-        return rid
+        req = Request(rid=-1, payload=None, prompt=list(prompt),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+        return self.queue.push(req).rid
 
     def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
-        while (self.queue or any(l.req for l in self.lanes)) \
+        while (len(self.queue) or any(l.req for l in self.lanes)) \
                 and self._ticks < max_ticks:
             self.tick()
         return self.finished
@@ -115,8 +119,8 @@ class ServingEngine:
         self._ticks += 1
         # 1) admit queued requests into free lanes
         for li, lane in enumerate(self.lanes):
-            if lane.req is None and self.queue:
-                req = self.queue.pop(0)
+            if lane.req is None and len(self.queue):
+                req = self.queue.pop()
                 lane.req = req
                 lane.pos = 0
                 lane.feeding = len(req.prompt) - 1  # last prompt token decodes
@@ -141,6 +145,7 @@ class ServingEngine:
         next_tok = np.asarray(next_tok)
 
         # 4) per-lane bookkeeping
+        import time
         for li, lane in enumerate(self.lanes):
             if lane.req is None:
                 continue
@@ -156,18 +161,23 @@ class ServingEngine:
                     or tok == req.eos_id
                     or lane.pos >= self.max_len - 1)
             if done:
-                req.done_t = time.monotonic()
+                req.finish(result=req.output)
                 self.finished.append(req)
                 lane.req = None
 
     # -- metrics ----------------------------------------------------------------
 
     def stats(self) -> dict:
-        lat = [r.done_t - r.submit_t for r in self.finished if r.done_t]
+        lat = [r.latency_s for r in self.finished if r.done_t]
         ttft = [r.first_token_t - r.submit_t for r in self.finished
                 if r.first_token_t]
         toks = sum(len(r.output) for r in self.finished)
+        pct = percentiles(lat)
         return {"requests": len(self.finished), "generated_tokens": toks,
                 "ticks": self._ticks,
                 "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
-                "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0}
+                "p50_latency_s": pct["p50"], "p95_latency_s": pct["p95"],
+                "p99_latency_s": pct["p99"],
+                "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+                "max_queue_depth": self.queue.max_depth,
+                "mean_queue_depth": self.queue.mean_depth}

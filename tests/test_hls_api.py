@@ -19,6 +19,7 @@ from repro.core.pipeline import CompilerConfig, CompilerDriver
 #: deliberate API changes: update the README and this tuple together.
 DOCUMENTED_SURFACE = (
     "compile",
+    "load",
     "trace",
     "Design",
     "Session",

@@ -1,11 +1,20 @@
-"""Serving engine: continuous batching, lane reuse, recurrent-state reset."""
+"""Serving engines.
+
+LM engine: continuous batching, lane reuse, recurrent-state reset.
+Design engine: adaptive batching, warm-boot artifacts, fault-tolerant
+replica restarts (the save/load + fault-injection acceptance criteria).
+"""
 
 import jax
 import numpy as np
 import pytest
 
+import repro.hls as hls
 from repro.configs import registry
+from repro.models import braggnn
 from repro.nn import module, transformer
+from repro.runtime.fault import FailureInjector
+from repro.serving.design_engine import DesignEngine, default_buckets
 from repro.serving.engine import ServingEngine
 
 
@@ -66,3 +75,192 @@ def test_eos_stops_generation():
     eng2.submit([1, 2], max_new_tokens=8, eos_id=tok)
     out = eng2.run_until_drained()[0].output
     assert out[0] == tok and len(out) == 1
+
+
+# ---------------------------------------------------------------------------
+# DesignEngine: adaptive batching over a compiled Design
+# ---------------------------------------------------------------------------
+
+
+IMG = 7
+
+
+@pytest.fixture(scope="module")
+def bound_design():
+    model = braggnn.build(1, IMG)
+    params = model.init_params(jax.random.key(0))
+    return hls.Session().compile(model.bind(params), name="braggnn_engine")
+
+
+@pytest.fixture(scope="module")
+def samples():
+    rng = np.random.default_rng(0)
+    return [rng.normal(0.0, 0.25, (1, 1, IMG, IMG)).astype(np.float32)
+            for _ in range(9)]
+
+
+def _drain(engine, xs):
+    reqs = [engine.submit(x) for x in xs]
+    engine.run_until_drained()
+    return [r.wait(timeout=30) for r in reqs]
+
+
+def _assert_same(a, b):
+    """Bit-identity across array outputs (tensor) or memref dicts (simd)."""
+    if isinstance(a, dict):
+        assert a.keys() == b.keys()
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    else:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_default_buckets():
+    assert default_buckets(8) == (1, 2, 4, 8)
+    assert default_buckets(12) == (1, 2, 4, 8, 12)
+    assert default_buckets(1) == (1,)
+    with pytest.raises(ValueError):
+        default_buckets(0)
+
+
+def test_engine_sync_mode_serves_all_requests(bound_design, samples):
+    eng = bound_design.engine(backend="tensor", max_batch=4)
+    outs = _drain(eng, samples)
+    rep = eng.report()
+    assert rep.completed == len(samples) and rep.dropped == 0
+    assert all(np.asarray(o).shape == (2,) for o in outs)
+    # head-of-queue grouping: 9 requests, max_batch 4 -> 4+4+1
+    assert sorted(rep.batch_hist.items()) == [(1, 1), (4, 2)]
+    assert rep.p95_ms >= rep.p50_ms >= 0.0
+
+
+def test_engine_matches_design_serve(bound_design, samples):
+    """Engine per-sample outputs == the sync Design.serve outputs.
+
+    Same bucket shape as the serve batch — bit-identity is a per-compiled-
+    program property, so the comparison pins one (9,) dispatch.
+    """
+    eng = bound_design.engine(backend="tensor", buckets=(len(samples),))
+    outs = _drain(eng, samples)
+    batch = np.concatenate(samples)          # (9, 1, IMG, IMG)
+    report = bound_design.serve([batch], backend="tensor", collect=True)
+    ref = np.asarray(report.outputs[0])
+    for i, o in enumerate(outs):
+        np.testing.assert_array_equal(o, ref[i])
+
+
+def test_engine_padding_counts_bucket_fill(bound_design, samples):
+    eng = bound_design.engine(backend="tensor", buckets=(4,))
+    _drain(eng, samples[:3])
+    rep = eng.report()
+    assert rep.batch_hist == {4: 1}
+    assert rep.padded_samples == 1
+
+
+def test_engine_threaded_mode_drains_on_stop(bound_design, samples):
+    eng = bound_design.engine(backend="simd", max_batch=4, max_delay_ms=1.0)
+    with eng:
+        reqs = [eng.submit(x) for x in samples]
+        outs = [r.wait(timeout=30) for r in reqs]
+    rep = eng.report()
+    assert rep.completed == len(samples) and rep.dropped == 0
+    assert rep.qps > 0
+    # the SIMD design returns its output memrefs as a dict, sliced per sample
+    assert all(np.asarray(o["dense_3_out"]).shape == (1, 2) for o in outs)
+    with pytest.raises(RuntimeError, match="stopped"):
+        eng.submit(samples[0])
+
+
+def test_engine_rejects_bad_sample_shape(bound_design):
+    eng = bound_design.engine(backend="tensor", max_batch=2)
+    with pytest.raises(ValueError, match="does not match input memref"):
+        eng.submit(np.zeros((3, 3), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Warm-boot artifacts: Design.save / hls.load
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["tensor", "simd"])
+def test_save_load_round_trip_bit_identical(bound_design, samples,
+                                            tmp_path, backend):
+    path = tmp_path / "bragg.design"
+    bound_design.save(path, backend=backend)
+    ref = _drain(bound_design.engine(backend=backend, max_batch=4), samples)
+
+    loaded = hls.load(path)
+    assert loaded.manifest["backend"] == backend
+    assert loaded.manifest["path"] == str(path)
+    eng = loaded.engine(max_batch=4)         # backend from the manifest
+    assert eng.backend == backend
+    outs = _drain(eng, samples)
+    for a, b in zip(ref, outs):
+        _assert_same(a, b)
+
+
+def test_load_rejects_non_artifact(tmp_path):
+    p = tmp_path / "junk.design"
+    import pickle
+    p.write_bytes(pickle.dumps({"nope": 1}))
+    with pytest.raises(ValueError, match="not a repro design artifact"):
+        hls.load(p)
+    with pytest.raises(FileNotFoundError):
+        hls.load(tmp_path / "missing.design")
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: poisoned dispatch -> artifact warm re-boot, zero dropped
+# ---------------------------------------------------------------------------
+
+
+def test_fault_injection_restarts_from_artifact_no_request_lost(
+        bound_design, samples, tmp_path):
+    path = tmp_path / "bragg.design"
+    bound_design.save(path, backend="tensor")
+
+    # uninterrupted reference run
+    ref = _drain(bound_design.engine(backend="tensor", max_batch=4,
+                                     artifact_path=path), samples)
+
+    # poison dispatch 1: the second batch fails mid-stream
+    inj = FailureInjector(fail_at=(1,))
+    eng = bound_design.engine(backend="tensor", max_batch=4,
+                              artifact_path=path, injector=inj)
+    outs = _drain(eng, samples)
+    rep = eng.report()
+    assert inj.fired == [1]
+    assert rep.restarts == 1
+    assert rep.boots == ["memory", "artifact"]   # re-booted from the file
+    assert rep.dropped == 0
+    assert rep.retried == 4                      # the failed batch, requeued
+    assert rep.completed == len(samples)
+    for a, b in zip(ref, outs):                  # bit-identical recovery
+        _assert_same(a, b)
+
+
+def test_fault_exhausted_retries_fail_requests_not_hang(bound_design,
+                                                        samples):
+    inj = FailureInjector(fail_at=(0, 1, 2))
+    eng = bound_design.engine(backend="tensor", max_batch=4, max_retries=2,
+                              injector=inj)
+    reqs = [eng.submit(x) for x in samples[:4]]
+    eng.run_until_drained()
+    rep = eng.report()
+    assert rep.restarts == 3
+    assert rep.dropped == 4                      # failed after max_retries
+    for r in reqs:
+        with pytest.raises(RuntimeError, match="injected failure"):
+            r.wait(timeout=5)
+
+
+# ---------------------------------------------------------------------------
+# ServeReport percentiles (sync Design.serve gains the same tail fields)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_report_has_percentiles(bound_design, samples):
+    batch = np.concatenate(samples)
+    report = bound_design.serve([batch] * 5, backend="tensor")
+    assert report.p99_ms >= report.p95_ms >= report.p50_ms > 0.0
+    assert "p50" in report.summary()
