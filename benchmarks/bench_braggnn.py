@@ -21,9 +21,12 @@ import time
 import numpy as np
 
 import repro.hls as hls
+from repro import obs
 from repro.core import emit, frontend, verify
 from repro.core.schedule import CLOCK_NS
 from repro.core.precision import FORMATS
+
+log = obs.get_logger(__name__)
 
 U280_DSP = 9024
 
@@ -149,28 +152,30 @@ def run(s: int = 1, img: int = 11) -> dict:
 def main(print_csv: bool = True, s: int = 1, img: int = 11) -> dict:
     out = run(s=s, img=img)
     if print_csv:
-        print(f"# BraggNN(s={s}, img={img}): ops {out['ops_raw']} -> "
-              f"{out['ops_opt']}, compile {out['build_s']}s "
-              f"(trace {out['trace_s']} / passes {out['passes_s']} / "
-              f"schedule {out['schedule_s']}; "
-              f"{out['pass_ops_per_s']:,} ops/s through the pass pipeline, "
-              f"{out['passes_skipped']} pass applications skipped)")
-        print("# per-pass time: "
-              + ", ".join(f"{k}={v}s" for k, v in out["pass_s"].items()))
+        log.info("# BraggNN(s=%s, img=%s): ops %s -> %s, compile %ss "
+                 "(trace %s / passes %s / schedule %s; %s ops/s through "
+                 "the pass pipeline, %s pass applications skipped)",
+                 s, img, out["ops_raw"], out["ops_opt"], out["build_s"],
+                 out["trace_s"], out["passes_s"], out["schedule_s"],
+                 f"{out['pass_ops_per_s']:,}", out["passes_skipped"])
+        log.info("# per-pass time: %s",
+                 ", ".join(f"{k}={v}s" for k, v in out["pass_s"].items()))
         print("design,intervals,stage_ii,us_per_sample,dsp,ff,bram")
         for r in out["rows"]:
             print(f"{r['design']},{r['intervals']},{r['stage_ii']},"
                   f"{r['us_per_sample']:.2f},{r['dsp']},{r['ff']},{r['bram']}")
-        print(f"# paper: 1238 intervals total, 3-stage II=480 -> 4.8 us")
-        print(f"# SLL crossings (avail {out['sll_available']}): "
-              + ", ".join(f"{k}={v}" for k, v in out["sll"].items()))
-        print("# quant rel-err vs fp32: "
-              + ", ".join(f"{k}={v:.4f}" for k, v in out["quant_err"].items()))
-        print("# CPU throughput (us/sample): "
-              + ", ".join(f"{k}={v}" for k, v in out["backends"].items()))
-        print(f"# pallas plan: {out['pallas_plan']}")
+        log.info("# paper: 1238 intervals total, 3-stage II=480 -> 4.8 us")
+        log.info("# SLL crossings (avail %s): %s", out["sll_available"],
+                 ", ".join(f"{k}={v}" for k, v in out["sll"].items()))
+        log.info("# quant rel-err vs fp32: %s",
+                 ", ".join(f"{k}={v:.4f}"
+                           for k, v in out["quant_err"].items()))
+        log.info("# CPU throughput (us/sample): %s",
+                 ", ".join(f"{k}={v}" for k, v in out["backends"].items()))
+        log.info("# pallas plan: %s", out["pallas_plan"])
     return out
 
 
 if __name__ == "__main__":
+    obs.setup_logging()
     main()

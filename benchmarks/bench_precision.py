@@ -14,11 +14,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.precision import (FORMATS, exponent_histogram,
                                   required_exponent_bits)
 from repro.models import braggnn
 from repro.nn import module
 from repro.optim import adamw
+
+log = obs.get_logger(__name__)
 
 
 def train(steps: int = 300, img: int = 11, batch: int = 64):
@@ -72,11 +75,12 @@ def run(steps: int = 300) -> dict:
 def main(print_csv: bool = True, steps: int = 300) -> dict:
     out = run(steps)
     if print_csv:
-        print(f"# trained {steps} steps: loss {out['loss_first']:.3f} -> "
-              f"{out['loss_last']:.4f}")
-        print(f"# weight exponents in [{out['exp_min']}, {out['exp_max']}] "
-              f"-> required wE={out['required_we_100']} "
-              f"(99.9%: {out['required_we_999']}) — paper keeps wE=5")
+        log.info("# trained %s steps: loss %.3f -> %.4f", steps,
+                 out["loss_first"], out["loss_last"])
+        log.info("# weight exponents in [%s, %s] -> required wE=%s "
+                 "(99.9%%: %s) — paper keeps wE=5", out["exp_min"],
+                 out["exp_max"], out["required_we_100"],
+                 out["required_we_999"])
         print("format,mean_pixel_error")
         print(f"fp32,{out['pixel_err_fp32']:.4f}")
         for key in ("5_11", "5_4", "5_3"):
@@ -85,4 +89,5 @@ def main(print_csv: bool = True, steps: int = 300) -> dict:
 
 
 if __name__ == "__main__":
+    obs.setup_logging()
     main()

@@ -10,13 +10,16 @@ from __future__ import annotations
 
 import pathlib
 
+from repro import obs
 from repro.launch import roofline
+
+log = obs.get_logger(__name__)
 
 
 def main(print_csv: bool = True, dryrun_dir: str = "experiments/dryrun"):
     if not pathlib.Path(dryrun_dir).exists():
-        print(f"# no dry-run artifacts under {dryrun_dir}; run "
-              f"`python -m repro.launch.dryrun` first")
+        log.warning("# no dry-run artifacts under %s; run "
+                    "`python -m repro.launch.dryrun` first", dryrun_dir)
         return []
     rows = roofline.load_cells(dryrun_dir)
     if print_csv:
@@ -30,4 +33,5 @@ def main(print_csv: bool = True, dryrun_dir: str = "experiments/dryrun"):
 
 
 if __name__ == "__main__":
+    obs.setup_logging()
     main()

@@ -34,7 +34,10 @@ import jax
 import numpy as np
 
 import repro.hls as hls
+from repro import obs
 from repro.models import braggnn
+
+log = obs.get_logger(__name__)
 
 
 @dataclasses.dataclass
@@ -189,20 +192,22 @@ if __name__ == "__main__":
     ap.add_argument("--assert-healthy", action="store_true",
                     help="exit 1 unless QPS>0 and zero dropped everywhere")
     a = ap.parse_args()
+    obs.setup_logging()
     result = main(fast=a.fast,
                   backends=a.backends.split(",") if a.backends else None)
     for name, b in result["backends"].items():
-        print(f"# {name}: {b['qps']} qps, p50 {b['p50_ms']}ms / "
-              f"p95 {b['p95_ms']}ms / p99 {b['p99_ms']}ms, "
-              f"max queue {b['max_queue_depth']}, "
-              f"{b['dispatches']} dispatches {b['batch_hist']}")
-    print(f"# boot: cold {result['cold_compile_s']}s vs warm "
-          f"{result['warm_boot_s']}s ({result['warm_speedup']}x)")
+        log.info("# %s: %s qps, p50 %sms / p95 %sms / p99 %sms, "
+                 "max queue %s, %s dispatches %s", name, b["qps"],
+                 b["p50_ms"], b["p95_ms"], b["p99_ms"],
+                 b["max_queue_depth"], b["dispatches"], b["batch_hist"])
+    log.info("# boot: cold %ss vs warm %ss (%sx)",
+             result["cold_compile_s"], result["warm_boot_s"],
+             result["warm_speedup"])
     if a.out:
         import json
         pathlib.Path(a.out).write_text(json.dumps(result, indent=1))
     if a.assert_healthy:
         issues = check_healthy(result)
         for p in issues:
-            print(f"# UNHEALTHY: {p}", file=sys.stderr)
+            log.error("# UNHEALTHY: %s", p)
         sys.exit(1 if issues else 0)

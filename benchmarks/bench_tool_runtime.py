@@ -11,7 +11,10 @@ the trend line that replaces the paper's hours-scale curve.
 from __future__ import annotations
 
 import repro.hls as hls
+from repro import obs
 from repro.core import frontend
+
+log = obs.get_logger(__name__)
 
 IMAGE_SIZES = (8, 16, 32, 64, 96, 128)
 
@@ -53,13 +56,15 @@ def main(print_csv: bool = True) -> list[dict]:
             print(f"{r['image']},{r['trip_count']},{r['ops']},"
                   f"{r['ops_opt']},{r['interp_s']},{r['passes_s']},"
                   f"{r['schedule_s']},{r['total_s']},{r['intervals']}")
-        print("# per-pass wall time (s), largest image:")
+        log.info("# per-pass wall time (s), largest image:")
         for k, v in rows[-1]["per_pass_s"].items():
-            print(f"#   {k}: {v}")
+            log.info("#   %s: %s", k, v)
         # the paper's 128x128 static-analysis time for contrast
-        print("# paper Fig.2: static -affine-scalrep at 128x128 = 577,419 s")
+        log.info("# paper Fig.2: static -affine-scalrep at 128x128 = "
+                 "577,419 s")
     return rows
 
 
 if __name__ == "__main__":
+    obs.setup_logging()
     main()

@@ -17,6 +17,10 @@ so the perf trajectory across PRs is diffable.  Mapping to the paper:
 Re-running the same day merges into the existing ``BENCH_<date>.json``:
 sections whose benchmark was skipped (``--only``) carry forward from the
 earlier run instead of being dropped.
+
+When :mod:`repro.obs` is enabled (``REPRO_OBS=1``), the run's metrics
+snapshot (cache hits/misses, padding waste, queue-depth histograms, ...)
+is embedded under the report's ``"obs"`` key.
 """
 
 from __future__ import annotations
@@ -28,7 +32,11 @@ import pathlib
 import sys
 import time
 
+from repro import obs
+
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+log = obs.get_logger(__name__)
 
 
 def _timed(name, results, fn, *args, **kw):
@@ -112,6 +120,10 @@ def write_report(results: dict, args, out_path=None) -> pathlib.Path:
         "serving": serving,
         "benchmarks": benchmarks,
     }
+    if obs.enabled():
+        # metrics collected across the whole run (cache hits, padding
+        # waste, queue depths, ...) ride along in the perf trajectory
+        report["obs"] = _jsonable(obs.snapshot())
     path.write_text(json.dumps(report, indent=1, sort_keys=True))
     return path
 
@@ -136,17 +148,17 @@ def compare_with_previous(report: dict, path: pathlib.Path) -> None:
             and old_b.get("build_s") and new_b.get("build_s")):
         return
     speedup = old_b["build_s"] / new_b["build_s"]
-    print(f"# compile-perf vs {prev_path.name}: build_s "
-          f"{old_b['build_s']} -> {new_b['build_s']} ({speedup:.1f}x)")
+    log.info("# compile-perf vs %s: build_s %s -> %s (%.1fx)",
+             prev_path.name, old_b["build_s"], new_b["build_s"], speedup)
     old_p, new_p = old_b.get("pass_s") or {}, new_b.get("pass_s") or {}
     for name in sorted(set(old_p) | set(new_p)):
-        print(f"#   pass {name}: {old_p.get(name, '-')}s -> "
-              f"{new_p.get(name, '-')}s")
+        log.info("#   pass %s: %ss -> %ss", name, old_p.get(name, "-"),
+                 new_p.get(name, "-"))
     if new_b.get("pass_ops_per_s"):
-        print(f"#   pass-pipeline throughput: "
-              f"{new_b['pass_ops_per_s']:,} ops/s"
-              + (f" (was {old_b['pass_ops_per_s']:,})"
-                 if old_b.get("pass_ops_per_s") else ""))
+        log.info("#   pass-pipeline throughput: %s ops/s%s",
+                 f"{new_b['pass_ops_per_s']:,}",
+                 (f" (was {old_b['pass_ops_per_s']:,})"
+                  if old_b.get("pass_ops_per_s") else ""))
 
     def _backends(b):
         if isinstance(b.get("backends"), dict):
@@ -158,10 +170,10 @@ def compare_with_previous(report: dict, path: pathlib.Path) -> None:
 
     old_bk, new_bk = _backends(old_b), _backends(new_b)
     if new_bk:
-        print("#   serving backends (us/sample): "
-              + ", ".join(f"{name} {old_bk.get(name, '-')} -> "
-                          f"{new_bk.get(name, '-')}"
-                          for name in sorted(set(old_bk) | set(new_bk))))
+        log.info("#   serving backends (us/sample): %s",
+                 ", ".join(f"{name} {old_bk.get(name, '-')} -> "
+                           f"{new_bk.get(name, '-')}"
+                           for name in sorted(set(old_bk) | set(new_bk))))
 
 
 def compare_serving(report: dict, path: pathlib.Path) -> None:
@@ -178,16 +190,16 @@ def compare_serving(report: dict, path: pathlib.Path) -> None:
         return
     old_s = old.get("serving") or {}
     old_bk = old_s.get("backends") or {}
-    print(f"# serving vs {previous[-1].name}:")
+    log.info("# serving vs %s:", previous[-1].name)
     for name in sorted(new_s["backends"]):
         nb, ob = new_s["backends"][name], old_bk.get(name) or {}
         for metric in ("qps", "p50_ms", "p95_ms", "p99_ms",
                        "max_queue_depth"):
-            print(f"#   {name}.{metric}: {ob.get(metric, '-')} -> "
-                  f"{nb.get(metric, '-')}")
+            log.info("#   %s.%s: %s -> %s", name, metric,
+                     ob.get(metric, "-"), nb.get(metric, "-"))
     for metric in ("cold_compile_s", "warm_boot_s", "warm_speedup"):
-        print(f"#   {metric}: {old_s.get(metric, '-')} -> "
-              f"{new_s.get(metric, '-')}")
+        log.info("#   %s: %s -> %s", metric, old_s.get(metric, "-"),
+                 new_s.get(metric, "-"))
 
 
 def main() -> None:
@@ -199,6 +211,7 @@ def main() -> None:
                     help="aggregate JSON path (default: "
                          "BENCH_<date>.json at the repo root)")
     args, _ = ap.parse_known_args()
+    obs.setup_logging()
 
     from benchmarks import (bench_braggnn, bench_layers, bench_precision,
                             bench_roofline, bench_serving,
@@ -211,33 +224,33 @@ def main() -> None:
     results: dict = {}
     print("name,us_per_call,derived")
     if "layers" in todo:
-        print("## Fig4: layer suite ##")
+        log.info("## Fig4: layer suite ##")
         _timed("bench_layers", results, bench_layers.main)
     if "tool_runtime" in todo:
-        print("## Fig2/5: tool runtime ##")
+        log.info("## Fig2/5: tool runtime ##")
         if args.fast:
             bench_tool_runtime.IMAGE_SIZES = (8, 16, 32)
         _timed("bench_tool_runtime", results, bench_tool_runtime.main)
     if "braggnn" in todo:
-        print("## §4.2: BraggNN case study ##")
+        log.info("## §4.2: BraggNN case study ##")
         img = 9 if args.fast else 11
         _timed("bench_braggnn", results, bench_braggnn.main, img=img)
     if "precision" in todo:
-        print("## Fig7: precision study ##")
+        log.info("## Fig7: precision study ##")
         steps = 60 if args.fast else 300
         _timed("bench_precision", results, bench_precision.main, steps=steps)
     if "roofline" in todo:
-        print("## §Roofline: 40-cell table ##")
+        log.info("## §Roofline: 40-cell table ##")
         _timed("bench_roofline", results, bench_roofline.main)
     if "serving" in todo:
-        print("## deployment: serving engine under bursty load ##")
+        log.info("## deployment: serving engine under bursty load ##")
         _timed("bench_serving", results, bench_serving.main, fast=args.fast)
 
     path = write_report(results, args, args.out)
     report = json.loads(path.read_text())
     compare_with_previous(report, path)
     compare_serving(report, path)
-    print(f"# aggregate report: {path}")
+    log.info("# aggregate report: %s", path)
 
 
 if __name__ == "__main__":

@@ -26,6 +26,10 @@ batching engine (``Design.engine``) and prints its tail-latency summary;
 ``--save PATH`` persists the warm-boot artifact, ``--load PATH`` boots
 from one instead of training + compiling (and is the engine's replica-
 restart source).
+
+``--trace-out PATH`` turns on :mod:`repro.obs` for the whole run and
+exports the compile-and-serve timeline as Chrome-trace JSON (open in
+``chrome://tracing`` or summarise with ``python -m repro.obs PATH``).
 """
 
 import argparse
@@ -35,9 +39,12 @@ import jax
 import jax.numpy as jnp
 
 import repro.hls as hls
+from repro import obs
 from repro.core.pipeline import parse_pipeline_spec
 from repro.models import braggnn
 from repro.optim import adamw
+
+log = obs.get_logger(__name__)
 
 
 def parse_args(argv=None):
@@ -56,6 +63,9 @@ def parse_args(argv=None):
     ap.add_argument("--load", default=None, metavar="PATH",
                     help="boot from a saved artifact instead of "
                          "training + compiling (hls.load)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable repro.obs and export the run's "
+                         "Chrome-trace JSON to PATH")
     return ap.parse_args(argv)
 
 
@@ -78,7 +88,7 @@ def train(model: hls.ModuleGraph, steps: int = 150) -> dict:
     for i in range(steps):
         x, y = braggnn.synthetic_peaks(jax.random.fold_in(key, i), 64)
         params, state, l = step(params, state, x, y)
-    print(f"trained BraggNN: loss {float(l):.4f}")
+    log.info("trained BraggNN: loss %.4f", float(l))
     return params
 
 
@@ -93,25 +103,40 @@ def serve_engine(design, serve_fmt, save_path=None) -> None:
         reqs = [eng.submit(s) for s in samples]
         for r in reqs:
             r.wait(timeout=60)
-    print(f"engine: {eng.report().summary()}")
+    log.info("engine: %s", eng.report().summary())
 
 
 def main(argv=None) -> None:
     args = parse_args(argv)
+    obs.setup_logging()
+    if args.trace_out:
+        obs.enable()
 
+    try:
+        _run(args)
+    finally:
+        if args.trace_out:
+            path = obs.export_chrome_trace(args.trace_out)
+            log.info("obs: exported Chrome trace to %s "
+                     "(chrome://tracing, or `python -m repro.obs %s`)",
+                     path, path)
+
+
+def _run(args) -> None:
     if args.load:
         # --- warm boot: one disk read, no training, no compile -------------
         t0 = time.perf_counter()
         design = hls.load(args.load)
-        print(f"warm boot from {args.load}: {time.perf_counter() - t0:.2f}s "
-              f"({design.name}, hash {design.design_hash[:12]})")
+        log.info("warm boot from %s: %.2fs (%s, hash %s)", args.load,
+                 time.perf_counter() - t0, design.name,
+                 design.design_hash[:12])
         serve_fmt = design.manifest.get("fmt")
         if args.engine:
             serve_engine(design, serve_fmt, save_path=args.load)
         else:
             x, _ = braggnn.synthetic_peaks(jax.random.key(7), 1024)
-            print(design.serve([x] * 10, fmt=serve_fmt,
-                               backend="tensor").summary())
+            log.info("%s", design.serve([x] * 10, fmt=serve_fmt,
+                                        backend="tensor").summary())
         return
 
     # --- describe once, train, bind ----------------------------------------
@@ -151,10 +176,11 @@ def main(argv=None) -> None:
              if design.stage_ii is not None else "unpipelined")
     served_from = "cache" if design.session.stats()["hits"] else \
         "cold compile"
-    print(f"OpenHLS schedule [{source}] ({served_from}, {compile_s:.1f}s): "
-          f"{design.makespan} intervals total, {stage} -> "
-          f"{design.sample_latency_us:.2f} us/sample "
-          f"(paper: 1238 total, 3-stage II=480 -> 4.8 us/sample)")
+    log.info("OpenHLS schedule [%s] (%s, %.1fs): %s intervals total, "
+             "%s -> %.2f us/sample "
+             "(paper: 1238 total, 3-stage II=480 -> 4.8 us/sample)",
+             source, served_from, compile_s, design.makespan, stage,
+             design.sample_latency_us)
 
     # --- serve batches at the deployed precision ---------------------------
     x, y = braggnn.synthetic_peaks(jax.random.key(7), 1024)
@@ -162,14 +188,14 @@ def main(argv=None) -> None:
                           collect=True)
     pred = report.outputs[-1]
     err_px = float(jnp.mean(jnp.abs(pred / 10.0 - y))) * 11
-    print(f"{report.summary()}; "
-          f"mean localisation error {err_px:.3f} px")
+    log.info("%s; mean localisation error %.3f px", report.summary(),
+             err_px)
 
     # --- warm-boot artifact + async engine ---------------------------------
     if args.save:
         path = design.save(args.save, backend="tensor", fmt=serve_fmt)
-        print(f"saved warm-boot artifact: {path} "
-              f"({path.stat().st_size:,} bytes)")
+        log.info("saved warm-boot artifact: %s (%s bytes)", path,
+                 f"{path.stat().st_size:,}")
     if args.engine:
         serve_engine(design, serve_fmt, save_path=args.save)
 

@@ -17,8 +17,11 @@ import argparse
 import numpy as np
 
 import repro.hls as hls
+from repro import obs
 from repro.core import FP_5_4, frontend
 from repro.core.pipeline import DEFAULT_PIPELINE, parse_pipeline_spec
+
+log = obs.get_logger(__name__)
 
 
 def build(ctx) -> None:
@@ -36,6 +39,7 @@ def main(argv=None) -> None:
                     help="comma-separated pass pipeline "
                          f"(default: {','.join(DEFAULT_PIPELINE)})")
     args = ap.parse_args(argv)
+    obs.setup_logging()
     try:
         config = hls.CompilerConfig() if args.pipeline is None else \
             hls.CompilerConfig(pipeline=parse_pipeline_spec(args.pipeline))
@@ -44,17 +48,18 @@ def main(argv=None) -> None:
 
     # 2. compile: trace -> passes -> schedule, one public entrypoint
     design = hls.compile(build, name="conv2d_quickstart", config=config)
-    print(design.report())
+    log.info("%s", design.report())
 
     # 3. one behavioural testbench covers it all (§3.2): optimised DFG and
     # emitted SIMD design vs the interpreter reference, plus the FloPoCo
     # (5,4) functional model
     report = design.verify(batch=4, seed=0, fmt=FP_5_4)
-    print(report.summary())
-    print(f"(5,4) max abs deviation vs fp32: "
-          f"{report.max_abs_err_quant:.4f}")
+    log.info("%s", report.summary())
+    log.info("(5,4) max abs deviation vs fp32: %.4f",
+             report.max_abs_err_quant)
     assert report.passed, "behavioural verification failed"
-    print("emitted SIMD design matches the functional simulation  [OK]")
+    log.info("emitted SIMD design matches the functional "
+             "simulation  [OK]")
 
     # 4. the deployable path: run a fresh batch through the jitted design
     import jax
@@ -62,14 +67,15 @@ def main(argv=None) -> None:
     from repro.core import verify
     feeds = verify.random_feeds(design.graph_opt, batch=4, seed=1)
     got = np.asarray(fn(feeds)["out"])
-    print(f"served a batch of 4 through the SIMD design: out {got.shape}")
+    log.info("served a batch of 4 through the SIMD design: out %s",
+             got.shape)
 
     # 5. a second compile of the same program is a cache hit
     hls.compile(build, name="conv2d_quickstart", config=config,
                 session=design.session)
     stats = design.session.stats()
-    print(f"design cache: {stats['hits']} hit(s), "
-          f"{stats['misses']} miss(es), hash {design.design_hash[:12]}")
+    log.info("design cache: %s hit(s), %s miss(es), hash %s",
+             stats["hits"], stats["misses"], design.design_hash[:12])
 
 
 if __name__ == "__main__":

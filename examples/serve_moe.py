@@ -8,12 +8,16 @@ import time
 
 import jax
 
+from repro import obs
 from repro.configs import registry
 from repro.nn import module, transformer
 from repro.serving.engine import ServingEngine
 
+log = obs.get_logger(__name__)
+
 
 def main() -> None:
+    obs.setup_logging()
     cfg = registry.get_tiny("mixtral-8x7b")
     params = module.init_tree(transformer.model_specs(cfg),
                               jax.random.key(0))
@@ -31,13 +35,13 @@ def main() -> None:
     finished = engine.run_until_drained()
     dt = time.monotonic() - t0
     s = engine.stats()
-    print(f"{cfg.name}: {s['requests']} requests / "
-          f"{s['generated_tokens']} tokens in {dt:.1f}s "
-          f"({s['generated_tokens']/dt:.1f} tok/s, "
-          f"4 lanes, continuous batching)")
+    log.info("%s: %s requests / %s tokens in %.1fs "
+             "(%.1f tok/s, 4 lanes, continuous batching)",
+             cfg.name, s["requests"], s["generated_tokens"], dt,
+             s["generated_tokens"] / dt)
     assert len(finished) == n_requests
     assert all(len(r.output) == 12 for r in finished)
-    print("sample output:", finished[0].output)
+    log.info("sample output: %s", finished[0].output)
 
 
 if __name__ == "__main__":

@@ -11,6 +11,7 @@ import time
 
 import jax
 
+from repro import obs
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import DataConfig, SyntheticTokenPipeline
@@ -18,6 +19,8 @@ from repro.launch.steps import make_train_step
 from repro.nn import module, transformer
 from repro.optim import adamw
 from repro.runtime.fault import DriverConfig, FailureInjector, TrainingDriver
+
+log = obs.get_logger(__name__)
 
 
 def main() -> None:
@@ -27,6 +30,7 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
     args = ap.parse_args()
+    obs.setup_logging()
 
     # ~100M params: 8L x d512 GQA + gated MLP + 32k vocab
     cfg = ModelConfig(
@@ -36,7 +40,7 @@ def main() -> None:
         remat="full")
     specs = transformer.model_specs(cfg)
     n = module.param_count(specs)
-    print(f"model: {n / 1e6:.1f}M params")
+    log.info("model: %.1fM params", n / 1e6)
 
     params = module.init_tree(specs, jax.random.key(0))
     opt = adamw.init_state(params)
@@ -57,11 +61,11 @@ def main() -> None:
     report = driver.run(params, opt)
     dt = time.monotonic() - t0
     toks = args.steps * args.batch * args.seq
-    print(f"done: {args.steps} steps, {toks/dt:.0f} tok/s, "
-          f"restarts={report.restarts} (1 injected), "
-          f"stragglers={len(report.straggler_steps)}")
-    print(f"loss: {report.losses[0]:.3f} -> {report.losses[-1]:.3f} "
-          f"(next-token CE on synthetic Zipf stream)")
+    log.info("done: %s steps, %.0f tok/s, restarts=%s (1 injected), "
+             "stragglers=%s", args.steps, toks / dt, report.restarts,
+             len(report.straggler_steps))
+    log.info("loss: %.3f -> %.3f (next-token CE on synthetic Zipf stream)",
+             report.losses[0], report.losses[-1])
     assert report.losses[-1] < report.losses[0]
 
 

@@ -42,6 +42,7 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core import emit
 from repro.core.ir import Graph
 from repro.core.precision import FORMATS, FloatFormat
@@ -295,12 +296,16 @@ def _lower_dfg(g: Graph, *, fmt_obj, use_pallas: bool, interpret: bool,
 
     n_values = g.n_values
     compiled = []
+    step_labels = []      # one label per compiled step, for profiling spans
     for kind, payload in steps:
         if kind == "segment":
             body, idx_flat = _segment_body(payload, opcode_table, q,
                                            n_values)
             compiled.append(_segment_fn(body, idx_flat, use_pallas,
                                         interpret))
+            step_labels.append(
+                f"segment{sum(1 for s in step_labels if 'segment' in s)}"
+                f"[{len(payload)} groups]")
         else:
             oc, arg_idx, res_idx = payload
             jargs = [jnp.asarray(ai) for ai in arg_idx]
@@ -314,12 +319,13 @@ def _lower_dfg(g: Graph, *, fmt_obj, use_pallas: bool, interpret: bool,
                 return buf.at[:, jres].set(r, mode="drop")
 
             compiled.append(fb)
+            step_labels.append(f"fallback[{oc}]")
     input_rank = {name: len(next(iter(g.inputs[name])))
                   for name in input_scatter}
     cval = q(jnp.asarray(const_val)) if q is not None \
         else jnp.asarray(const_val)
 
-    def run(feeds):
+    def _prologue(feeds):
         batch = 1
         for name in input_scatter:
             shp = jnp.shape(feeds[name])
@@ -336,11 +342,28 @@ def _lower_dfg(g: Graph, *, fmt_obj, use_pallas: bool, interpret: bool,
             if q is not None:
                 flat = q(flat)
             buf = buf.at[:, vids].set(flat)
-        for step in compiled:
-            buf = step(buf)
+        return buf, batch
+
+    def _epilogue(buf, batch):
         return {name: buf[:, vids].reshape((batch,) + shape)
                 for name, (vids, shape) in output_gather.items()}
 
+    def run(feeds):
+        buf, batch = _prologue(feeds)
+        for step in compiled:
+            buf = step(buf)
+        return _epilogue(buf, batch)
+
+    def profile(feeds):
+        # unjitted twin of ``run``: one span + device sync per fused
+        # segment / fallback step, so the per-kernel cost is observable
+        buf, batch = _prologue(feeds)
+        for label, step in zip(step_labels, compiled):
+            with obs.span(f"pallas.{label}", cat="pallas"):
+                buf = jax.block_until_ready(step(buf))
+        return _epilogue(buf, batch)
+
+    run.profile = profile
     return run
 
 
@@ -374,6 +397,7 @@ def _lower_module(module, *, fmt_obj, fmt_tuple, use_pallas: bool,
         weight_names.extend(n.weight_memrefs())
 
     steps: list[Callable] = []   # each: (x, w: dict) -> x
+    step_labels: list[str] = []  # one per step, for profiling spans
     i = 0
     while i < len(nodes):
         node = nodes[i]
@@ -432,6 +456,7 @@ def _lower_module(module, *, fmt_obj, fmt_tuple, use_pallas: bool,
         elif isinstance(node, nng.NonLocalBlock):
             steps.append(_nlb_step(node, conv_e, sm_e, fa_e, q, fmt_tuple,
                                    kw, nlb_flash, plan))
+            step_labels.append(_node_label(node))
             fuse_relu = False
             i += 1
             continue
@@ -473,6 +498,8 @@ def _lower_module(module, *, fmt_obj, fmt_tuple, use_pallas: bool,
         else:  # pragma: no cover - ModuleGraph validates the vocabulary
             raise NotImplementedError(type(node).__name__)
         steps.append(step)
+        step_labels.append(_node_label(node) + (":relu" if fuse_relu
+                                                else ""))
         i += 2 if fuse_relu else 1
 
     # the output memref is the last allocating node's (OutputReLU rewrites
@@ -487,7 +514,22 @@ def _lower_module(module, *, fmt_obj, fmt_tuple, use_pallas: bool,
             x = step(x, weights)
         return {out_name: x.reshape((x.shape[0],) + tuple(out_shape))}
 
+    def profile(x, weights):
+        # unjitted twin of ``run``: one span + device sync per registry
+        # kernel, so the per-kernel cost is observable
+        import jax
+        for label, step in zip(step_labels, steps):
+            with obs.span(f"pallas.kernel.{label}", cat="pallas"):
+                x = jax.block_until_ready(step(x, weights))
+        return {out_name: x.reshape((x.shape[0],) + tuple(out_shape))}
+
+    run.profile = profile
     return run, weight_names, out_name
+
+
+def _node_label(node) -> str:
+    return str(getattr(node, "name", None) or getattr(node, "label", None)
+               or type(node).__name__)
 
 
 def _nlb_step(node, conv_e, sm_e, fa_e, q, fmt_tuple, kw, nlb_flash: bool,
@@ -589,14 +631,20 @@ def to_pallas_fn(g: Graph, *, module=None, fmt=None, mode: str = "auto",
                              "or use mode='dfg')")
         fmt_tuple = (fmt_obj.exp_bits, fmt_obj.man_bits) \
             if fmt_obj is not None else None
-        core, weight_names, _ = _lower_module(
-            module, fmt_obj=fmt_obj, fmt_tuple=fmt_tuple,
-            use_pallas=use_pallas, interpret=interpret,
-            nlb_flash=nlb_flash, plan=plan)
+        with obs.span("emit.pallas", cat="pallas", mode=mode,
+                      fmt=fmt_key) as sp:
+            core, weight_names, _ = _lower_module(
+                module, fmt_obj=fmt_obj, fmt_tuple=fmt_tuple,
+                use_pallas=use_pallas, interpret=interpret,
+                nlb_flash=nlb_flash, plan=plan)
+            sp.set(kernels=sum(plan.kernels.values()),
+                   fallbacks=len(plan.fallbacks))
+        _plan_metrics(plan)
         jcore = jax.jit(core)
         in_name = module.input_name
         in_shape = tuple(module.input_shape)
         rank = len(in_shape)
+        profiled = [False]   # first obs-enabled call runs the span'd twin
 
         def run(feeds):
             missing = [n for n in weight_names if n not in feeds]
@@ -609,22 +657,48 @@ def to_pallas_fn(g: Graph, *, module=None, fmt=None, mode: str = "auto",
             x = x.reshape((x.shape[0],) + in_shape[1:])
             w = {name: np.asarray(feeds[name], dtype=np.float32)
                  for name in weight_names}
-            return dict(jcore(x, _normalize_weights(w, module)))
+            wn = _normalize_weights(w, module)
+            if obs.enabled() and not profiled[0]:
+                profiled[0] = True
+                with obs.span("pallas.profile", cat="pallas", mode=mode):
+                    return dict(core.profile(x, wn))
+            return dict(jcore(x, wn))
 
         run.plan = plan
         return run
 
-    core = _lower_dfg(g, fmt_obj=fmt_obj, use_pallas=use_pallas,
-                      interpret=interpret,
-                      opcode_table=opcode_table or kreg.OPCODE_KERNELS,
-                      plan=plan)
+    with obs.span("emit.pallas", cat="pallas", mode=mode, fmt=fmt_key) as sp:
+        core = _lower_dfg(g, fmt_obj=fmt_obj, use_pallas=use_pallas,
+                          interpret=interpret,
+                          opcode_table=opcode_table or kreg.OPCODE_KERNELS,
+                          plan=plan)
+        sp.set(segments=plan.n_segments, groups=plan.n_groups,
+               fused_scatters=plan.fused_scatters,
+               fallbacks=len(plan.fallbacks))
+    _plan_metrics(plan)
     jcore = jax.jit(core)
+    profiled = [False]       # first obs-enabled call runs the span'd twin
 
     def run(feeds):
+        if obs.enabled() and not profiled[0]:
+            profiled[0] = True
+            with obs.span("pallas.profile", cat="pallas", mode=mode):
+                return core.profile(feeds)
         return jcore(feeds)
 
     run.plan = plan
     return run
+
+
+def _plan_metrics(plan: PallasPlan) -> None:
+    """Lift the lowering plan's counts into the process metrics."""
+    obs.inc("pallas.lowerings")
+    obs.inc("pallas.segments", plan.n_segments)
+    obs.inc("pallas.groups", plan.n_groups)
+    obs.inc("pallas.scatter_elisions", plan.fused_scatters)
+    obs.inc("pallas.fallbacks", len(plan.fallbacks))
+    for kname, n in plan.kernels.items():
+        obs.inc(f"pallas.kernel.{kname}", n)
 
 
 def _normalize_weights(w: dict[str, np.ndarray], module) -> dict:

@@ -37,6 +37,7 @@ from typing import Callable, Optional, Sequence, Union
 
 import numpy as np
 
+from repro import obs
 from repro.core import emit, passes
 from repro.core.cachedir import CACHE_FORMAT_VERSION
 from repro.core.interp import Context
@@ -245,55 +246,66 @@ class PassManager:
         infos = {n: PASS_REGISTRY[n] for n in self.pipeline}
         for rnd in range(self.max_rounds):
             before = len(g.ops)
-            for name in self.pipeline:
-                info = infos[name]
-                d = dirty[name]
-                must_run = (d is ALL
-                            or (not info.self_clean
-                                and changed_last.get(name, False)))
-                if not must_run and d:
-                    must_run = info.matches is None or bool(info.matches & d)
-                if not must_run:
-                    hist = g.op_histogram()
-                    reports.append(PassReport(
-                        name=name, round=rnd, ops_before=len(g.ops),
-                        ops_after=len(g.ops), hist_before=hist,
-                        hist_after=hist, wall_s=0.0, skipped=True))
-                    continue
-                opts = self.pass_options.get(name, {})
-                hist_before = g.op_histogram()
-                n_before = len(g.ops)
-                t0 = time.perf_counter()
-                g_new = info.fn(g, **opts)
-                wall = time.perf_counter() - t0
-                rep = PassReport(
-                    name=name, round=rnd, ops_before=n_before,
-                    ops_after=len(g_new.ops), hist_before=hist_before,
-                    hist_after=g_new.op_histogram(), wall_s=wall)
-                if self.topo_check:
-                    try:
-                        g_new.topo_check()
-                        rep.topo_ok = True
-                    except ValueError:
-                        rep.topo_ok = False
-                        reports.append(rep)
-                        raise
-                if self.spot_verify is not None:
-                    rep.spot_err = self.spot_verify(g, g_new, name)
-                reports.append(rep)
-                changed = g_new is not g
-                changed_last[name] = changed
-                dirty[name] = set()
-                if changed:
-                    touched = getattr(g_new, "_touched", None)
-                    for other in self.pipeline:
-                        if other == name:
-                            continue
-                        if touched is None or dirty[other] is ALL:
-                            dirty[other] = ALL
-                        else:
-                            dirty[other] = dirty[other] | touched
-                g = g_new
+            with obs.span(f"passes.round{rnd}", cat="compile",
+                          round=rnd) as round_sp:
+                for name in self.pipeline:
+                    info = infos[name]
+                    d = dirty[name]
+                    must_run = (d is ALL
+                                or (not info.self_clean
+                                    and changed_last.get(name, False)))
+                    if not must_run and d:
+                        must_run = (info.matches is None
+                                    or bool(info.matches & d))
+                    if not must_run:
+                        hist = g.op_histogram()
+                        reports.append(PassReport(
+                            name=name, round=rnd, ops_before=len(g.ops),
+                            ops_after=len(g.ops), hist_before=hist,
+                            hist_after=hist, wall_s=0.0, skipped=True))
+                        obs.inc("compile.passes_skipped")
+                        continue
+                    opts = self.pass_options.get(name, {})
+                    hist_before = g.op_histogram()
+                    n_before = len(g.ops)
+                    t0 = time.perf_counter()
+                    with obs.span(f"passes.{name}", cat="compile",
+                                  round=rnd) as pass_sp:
+                        g_new = info.fn(g, **opts)
+                        pass_sp.set(ops_before=n_before,
+                                    ops_after=len(g_new.ops),
+                                    delta=len(g_new.ops) - n_before)
+                    wall = time.perf_counter() - t0
+                    rep = PassReport(
+                        name=name, round=rnd, ops_before=n_before,
+                        ops_after=len(g_new.ops), hist_before=hist_before,
+                        hist_after=g_new.op_histogram(), wall_s=wall)
+                    if self.topo_check:
+                        try:
+                            g_new.topo_check()
+                            rep.topo_ok = True
+                        except ValueError:
+                            rep.topo_ok = False
+                            reports.append(rep)
+                            raise
+                    if self.spot_verify is not None:
+                        rep.spot_err = self.spot_verify(g, g_new, name)
+                    reports.append(rep)
+                    obs.inc("compile.passes_run")
+                    changed = g_new is not g
+                    changed_last[name] = changed
+                    dirty[name] = set()
+                    if changed:
+                        touched = getattr(g_new, "_touched", None)
+                        for other in self.pipeline:
+                            if other == name:
+                                continue
+                            if touched is None or dirty[other] is ALL:
+                                dirty[other] = ALL
+                            else:
+                                dirty[other] = dirty[other] | touched
+                    g = g_new
+                round_sp.set(ops_before=before, ops_after=len(g.ops))
             if len(g.ops) == before:
                 break
         return g, reports
@@ -471,7 +483,9 @@ class CompiledDesign:
             raise TypeError(f"backend='simd' takes no extra keywords, got "
                             f"{sorted(pallas_kw)}")
         if self._jax_fn is None:
-            self._jax_fn = emit.to_jax_fn(self.graph_opt)
+            with obs.span("emit.simd", cat="compile", design=self.name,
+                          ops=len(self.graph_opt.ops)):
+                self._jax_fn = emit.to_jax_fn(self.graph_opt)
         return self._jax_fn
 
     def evaluate(self, feeds: dict, *, fmt: Optional[FloatFormat] = None,
@@ -589,6 +603,7 @@ class DesignCache:
         design = self.memory.get(key)
         if design is not None:
             self.hits += 1
+            obs.inc("design_cache.hits")
             return design
         path = self._path(key)
         if path is not None and path.exists():
@@ -600,8 +615,10 @@ class DesignCache:
             if design is not None:
                 self.memory[key] = design
                 self.hits += 1
+                obs.inc("design_cache.hits")
                 return design
         self.misses += 1
+        obs.inc("design_cache.misses")
         return None
 
     def put(self, key: str, design: CompiledDesign) -> None:
@@ -646,6 +663,8 @@ class CompilerDriver:
                  cache_dir: Optional[Union[str, Path]] = None):
         self.config = config or CompilerConfig()
         self.cache = cache or DesignCache(cache_dir)
+        #: full (non-cache-served) builds this driver has performed
+        self.recompiles = 0
         # pass-stage memo: (graph fingerprint, cfg.pass_key()) -> optimised
         # graph + reports.  Configs differing only in schedule knobs reuse
         # the (expensive) pass stage — the design-space explorer's hot path.
@@ -668,40 +687,60 @@ class CompilerDriver:
         cfg = config or self.config
         timings: dict[str, float] = {}
 
-        t0 = time.perf_counter()
-        if isinstance(program, Graph):
-            g_raw = program
-        else:
-            g_raw = self.trace(program, forward=cfg.forward)
-        timings["trace_s"] = time.perf_counter() - t0
+        with obs.span("compile", cat="compile", design=name) as compile_sp:
+            t0 = time.perf_counter()
+            with obs.span("compile.trace", cat="compile", design=name) as sp:
+                if isinstance(program, Graph):
+                    g_raw = program
+                else:
+                    g_raw = self.trace(program, forward=cfg.forward)
+                sp.set(ops=len(g_raw.ops))
+            timings["trace_s"] = time.perf_counter() - t0
 
-        key = hashlib.sha256(
-            (f"v{CACHE_FORMAT_VERSION}|" + graph_fingerprint(g_raw) + "|"
-             + cfg.key()).encode()).hexdigest()
-        cached = self.cache.get(key)
-        if cached is not None:
-            if cached.name != name:
-                # relabel for this caller; graphs/schedule/fn stay shared
-                return dataclasses.replace(cached, name=name)
-            return cached
+            key = hashlib.sha256(
+                (f"v{CACHE_FORMAT_VERSION}|" + graph_fingerprint(g_raw) + "|"
+                 + cfg.key()).encode()).hexdigest()
+            cached = self.cache.get(key)
+            if cached is not None:
+                compile_sp.set(cached=True, design_hash=key[:12])
+                if cached.name != name:
+                    # relabel for this caller; graphs/schedule/fn stay shared
+                    return dataclasses.replace(cached, name=name)
+                return cached
+            self.recompiles += 1
+            obs.inc("compile.recompiles")
 
-        t0 = time.perf_counter()
-        memo_key = (graph_fingerprint(g_raw), cfg.pass_key())
-        memoised = self._opt_memo.get(memo_key)
-        if memoised is not None:
-            g_opt, reports = memoised
-        else:
-            g_opt, reports = cfg.pass_manager().run(g_raw)
-            self._opt_memo[memo_key] = (g_opt, reports)
-        timings["passes_s"] = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            memo_key = (graph_fingerprint(g_raw), cfg.pass_key())
+            memoised = self._opt_memo.get(memo_key)
+            with obs.span("compile.passes", cat="compile", design=name,
+                          memo=memoised is not None) as sp:
+                if memoised is not None:
+                    g_opt, reports = memoised
+                    obs.inc("compile.pass_memo_hits")
+                else:
+                    g_opt, reports = cfg.pass_manager().run(g_raw)
+                    self._opt_memo[memo_key] = (g_opt, reports)
+                sp.set(ops_before=len(g_raw.ops), ops_after=len(g_opt.ops),
+                       applications=sum(1 for r in reports if not r.skipped))
+            timings["passes_s"] = time.perf_counter() - t0
 
-        t0 = time.perf_counter()
-        sched = list_schedule(g_opt, params=cfg.schedule_params())
-        stages = stage_ii = None
-        if cfg.n_stages > 1:
-            stages, stage_ii = partition_stages(g_opt, sched, cfg.n_stages)
-        timings["schedule_s"] = time.perf_counter() - t0
-        timings["total_s"] = sum(timings.values())
+            t0 = time.perf_counter()
+            with obs.span("compile.schedule", cat="compile",
+                          design=name) as sp:
+                sched = list_schedule(g_opt, params=cfg.schedule_params())
+                stages = stage_ii = None
+                if cfg.n_stages > 1:
+                    stages, stage_ii = partition_stages(g_opt, sched,
+                                                        cfg.n_stages)
+                sp.set(makespan=sched.makespan, stage_ii=stage_ii)
+            timings["schedule_s"] = time.perf_counter() - t0
+            timings["total_s"] = sum(timings.values())
+            compile_sp.set(cached=False, design_hash=key[:12],
+                           ops_raw=len(g_raw.ops), ops_opt=len(g_opt.ops),
+                           makespan=sched.makespan,
+                           **{f"{k[:-2]}_ms": round(v * 1e3, 3)
+                              for k, v in timings.items()})
 
         design = CompiledDesign(
             name=name, config=cfg, graph_raw=g_raw, graph_opt=g_opt,

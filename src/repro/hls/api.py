@@ -19,6 +19,7 @@ from typing import Any, Callable, Iterable, Optional, Sequence, Union
 
 import numpy as np
 
+from repro import obs
 from repro.core.cachedir import cache_root
 from repro.core.ir import Graph
 from repro.core.interp import Context
@@ -27,6 +28,8 @@ from repro.core.pipeline import (CompiledDesign, CompilerConfig,
                                  graph_fingerprint)
 from repro.hls import bridge
 from repro.nn.graph import ModuleGraph
+
+log = obs.get_logger(__name__)
 
 #: What ``compile`` accepts: a jax-level module graph, a loop-nest build
 #: callable (``Context -> None``), or an already-traced DFG.
@@ -377,11 +380,13 @@ class Design:
         hit = best_config_for(self._compiled.graph_raw, space, db=db)
         if hit is None:
             if verbose:
-                print(f"no tuned config for design {self.fingerprint[:12]} "
-                      f"/ space {space.name!r}: probed TuningDB {db.path} "
-                      f"(cache root {db.path.parent}) — run "
-                      f"`python -m repro.tune` or design.tune(space) first; "
-                      f"keeping the current config")
+                log.warning(
+                    "no tuned config for design %s / space %r: probed "
+                    "TuningDB %s (cache root %s) — run "
+                    "`python -m repro.tune` or design.tune(space) first; "
+                    "keeping the current config",
+                    self.fingerprint[:12], space.name, db.path,
+                    db.path.parent)
             return self, None
         config, candidate = hit
         design = self.with_config(config)
@@ -424,14 +429,18 @@ class Design:
         except StopIteration:
             return report
         t0 = time.perf_counter()
-        jax.block_until_ready(run_one(first))        # compile + warm
+        with obs.span("serve.warmup", cat="serve", backend=backend,
+                      design=self.name):
+            jax.block_until_ready(run_one(first))    # compile + warm
         report.warmup_s = time.perf_counter() - t0
 
         import itertools
         batch_s: list[float] = []
         for i, x in enumerate(itertools.chain((first,), it)):
             t0 = time.perf_counter()
-            out = jax.block_until_ready(run_one(x))
+            with obs.span("serve.batch", cat="serve", backend=backend,
+                          batch=i):
+                out = jax.block_until_ready(run_one(x))
             batch_s.append(time.perf_counter() - t0)
             report.wall_s += batch_s[-1]
             report.batches += 1
@@ -445,6 +454,9 @@ class Design:
         report.p50_ms = pct["p50"] * 1e3
         report.p95_ms = pct["p95"] * 1e3
         report.p99_ms = pct["p99"] * 1e3
+        if report.samples:
+            obs.gauge(f"serve.us_per_sample.{backend}",
+                      report.us_per_sample)
         return report
 
     def _runner(self, backend: str, fmt: Optional[str],
@@ -572,7 +584,16 @@ class Design:
     # -- reporting ----------------------------------------------------------
 
     def report(self) -> str:
-        """Pass / schedule / latency summary of the whole artifact."""
+        """Pass / schedule / latency summary of the whole artifact.
+
+        For the live span/metric view of a compile-and-serve run, enable
+        :mod:`repro.obs` (``obs.enable()`` or ``REPRO_OBS=1``): an extra
+        ``obs`` line then summarises the recorded spans and cache
+        counters, ``obs.metrics.snapshot()`` has the full metric dump,
+        and ``obs.export_chrome_trace(path)`` writes the timeline for
+        ``chrome://tracing`` (terminal view:
+        ``python -m repro.obs <trace.json>``).
+        """
         d = self._compiled
         res = d.schedule.resources()
         lines = [d.summary()]
@@ -598,6 +619,14 @@ class Design:
                      f"{t.get('schedule_s', 0.0):.2f})")
         if self._tuned_candidate is not None:
             lines.append(f"  tuned    : {self._tuned_candidate.label()}")
+        if obs.enabled():
+            counters = obs.snapshot()["counters"]
+            lines.append(
+                f"  obs      : {len(obs.tracer.spans())} spans recorded, "
+                f"cache {counters.get('design_cache.hits', 0):.0f} hits / "
+                f"{counters.get('design_cache.misses', 0):.0f} misses — "
+                f"obs.export_chrome_trace(path), then "
+                f"`python -m repro.obs <trace.json>`")
         return "\n".join(lines)
 
 
@@ -651,11 +680,11 @@ class Session:
                                                    forward=config.forward)
             else:
                 from repro.core.pipeline import graph_fingerprint
-                print(f"no tuned config for design "
-                      f"{graph_fingerprint(to_compile)[:12]} / space "
-                      f"{tuned.name!r}: probed TuningDB {db.path} — run "
-                      f"`python -m repro.tune` or design.tune(space) "
-                      f"first; compiling the given config")
+                log.warning(
+                    "no tuned config for design %s / space %r: probed "
+                    "TuningDB %s — run `python -m repro.tune` or "
+                    "design.tune(space) first; compiling the given config",
+                    graph_fingerprint(to_compile)[:12], tuned.name, db.path)
         compiled = self.driver.compile(
             to_compile, name=name or _default_name(model, module),
             config=config)
@@ -664,9 +693,19 @@ class Session:
                       tuned_candidate=candidate)
 
     def stats(self) -> dict[str, int]:
-        """Design-cache hit/miss counters (serving warm-path telemetry)."""
+        """Compile-side telemetry of this session.
+
+        ``hits``/``misses`` are the design-cache counters (the serving
+        warm-path signal), ``recompiles`` counts full (non-cache-served)
+        builds, and the entry counts size the in-memory design cache and
+        the pass-stage memo.  The same counters feed the process metrics
+        (``design_cache.*`` in ``repro.obs``) when observability is on.
+        """
         return {"hits": self.driver.cache.hits,
-                "misses": self.driver.cache.misses}
+                "misses": self.driver.cache.misses,
+                "recompiles": self.driver.recompiles,
+                "memory_entries": len(self.driver.cache.memory),
+                "pass_memo_entries": len(self.driver._opt_memo)}
 
 
 #: process-default sessions, one per cache location ("" = memory-only)

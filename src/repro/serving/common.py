@@ -18,14 +18,21 @@ from typing import Any, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
+
 
 def percentiles(values: Sequence[float],
                 pcts: Sequence[int] = (50, 95, 99)) -> dict[str, float]:
     """``{"p50": ..., "p95": ..., "p99": ...}`` over ``values`` (0.0 when
-    empty) — the tail-latency summary both serve reports share."""
+    empty) — the tail-latency summary both serve reports share.  NaNs are
+    rejected rather than poisoning every percentile; an all-NaN or empty
+    input reports zeros."""
     if not len(values):
         return {f"p{p}": 0.0 for p in pcts}
     arr = np.asarray(values, dtype=np.float64)
+    arr = arr[~np.isnan(arr)]
+    if not arr.size:
+        return {f"p{p}": 0.0 for p in pcts}
     return {f"p{p}": float(np.percentile(arr, p)) for p in pcts}
 
 
@@ -81,11 +88,16 @@ class RequestQueue:
     """Thread-safe FIFO of :class:`QueuedRequest` with depth telemetry.
 
     Owns rid assignment and the submit timestamp so every engine reports
-    comparable latencies.  ``depth_samples`` records the queue depth at
-    each submit/pop — max/mean queue depth is the load-generator-facing
-    congestion signal.  ``requeue_front`` puts a failed batch back at the
-    head *in order*, which is what keeps replica restarts from dropping
-    or reordering in-flight requests.
+    comparable latencies.  Depth telemetry is recorded two ways: the
+    legacy ``depth_samples`` value list, and ``depth_events`` — the full
+    ``(monotonic_t, depth)`` transition log from every push/pop/requeue
+    plus any timer-driven ``sample_depth()`` calls.  ``depth_stats()``
+    integrates that step function for *time-weighted* mean/p95/max, so a
+    bursty queue that sits deep between dispatches is reported at its
+    true depth instead of only at the instants the engine touched it.
+    ``requeue_front`` puts a failed batch back at the head *in order*,
+    which is what keeps replica restarts from dropping or reordering
+    in-flight requests.
     """
 
     def __init__(self):
@@ -94,6 +106,7 @@ class RequestQueue:
         self._next_rid = 0
         self.submitted = 0
         self.depth_samples: list[int] = []
+        self.depth_events: list[tuple[float, int]] = []
 
     def __len__(self) -> int:
         with self._cond:
@@ -112,7 +125,7 @@ class RequestQueue:
             self._next_rid += 1
             self._items.append(req)
             self.submitted += 1
-            self.depth_samples.append(len(self._items))
+            self._note_depth()
             self._cond.notify_all()
             return req
 
@@ -126,7 +139,7 @@ class RequestQueue:
         with self._cond:
             taken, self._items = self._items[:n], self._items[n:]
             if taken:
-                self.depth_samples.append(len(self._items))
+                self._note_depth()
             return taken
 
     def requeue_front(self, reqs: Sequence[QueuedRequest]) -> None:
@@ -136,6 +149,8 @@ class RequestQueue:
             for r in reqs:
                 r.retries += 1
             self._items[:0] = list(reqs)
+            if reqs:
+                self._note_depth()
             self._cond.notify_all()
 
     def oldest_age_s(self) -> Optional[float]:
@@ -156,6 +171,21 @@ class RequestQueue:
 
     # -- telemetry ----------------------------------------------------------
 
+    def _note_depth(self) -> None:
+        """Record the current depth (call under ``self._cond``)."""
+        depth = len(self._items)
+        self.depth_samples.append(depth)
+        self.depth_events.append((time.monotonic(), depth))
+        obs.observe("serve.queue_depth", depth)
+
+    def sample_depth(self) -> int:
+        """Timer-driven depth observation (the engine loop calls this so
+        idle/ramp periods appear in the telemetry, not just the instants a
+        push or dispatch happened to touch the queue)."""
+        with self._cond:
+            self._note_depth()
+            return len(self._items)
+
     @property
     def max_depth(self) -> int:
         return max(self.depth_samples, default=0)
@@ -164,3 +194,37 @@ class RequestQueue:
     def mean_depth(self) -> float:
         return (float(np.mean(self.depth_samples))
                 if self.depth_samples else 0.0)
+
+    def depth_stats(self) -> dict[str, float]:
+        """Time-weighted depth statistics over the transition log.
+
+        Each recorded depth holds from its event until the next one; the
+        step function is integrated exactly, so 300 ms spent at depth 8
+        dominates a handful of instantaneous dispatch touches.  With
+        fewer than two events this degrades to the plain values.  Returns
+        ``{"max", "mean", "p95"}``.
+        """
+        with self._cond:
+            events = list(self.depth_events)
+        if not events:
+            return {"max": 0, "mean": 0.0, "p95": 0.0}
+        if len(events) == 1:
+            d = float(events[0][1])
+            return {"max": int(d), "mean": d, "p95": d}
+        total = events[-1][0] - events[0][0]
+        if total <= 0:
+            vals = [d for _, d in events]
+            return {"max": max(vals), "mean": float(np.mean(vals)),
+                    "p95": float(np.percentile(vals, 95))}
+        weight: dict[int, float] = {}
+        for (t0, d), (t1, _) in zip(events, events[1:]):
+            weight[d] = weight.get(d, 0.0) + (t1 - t0)
+        mean = sum(d * w for d, w in weight.items()) / total
+        p95 = float(max(weight))       # fallback if rounding never trips
+        acc = 0.0
+        for d in sorted(weight):
+            acc += weight[d]
+            if acc >= 0.95 * total:
+                p95 = float(d)
+                break
+        return {"max": max(d for _, d in events), "mean": mean, "p95": p95}

@@ -38,6 +38,7 @@ from typing import Optional, Sequence, Union
 
 import numpy as np
 
+from repro import obs
 from repro.runtime.fault import FailureInjector, StepWatchdog
 from repro.serving.common import QueuedRequest, RequestQueue, percentiles
 
@@ -81,13 +82,18 @@ class EngineReport:
     batch_hist: dict = dataclasses.field(default_factory=dict)
     padded_samples: int = 0
     wall_s: float = 0.0
+    #: cumulative on-device batch compute time across dispatches, seconds
+    compute_s: float = 0.0
     qps: float = 0.0
     p50_ms: float = 0.0
     p95_ms: float = 0.0
     p99_ms: float = 0.0
     mean_ms: float = 0.0
     max_queue_depth: int = 0
+    #: time-weighted over the full queue-depth transition log (idle and
+    #: ramp periods included), not just the instants a dispatch sampled
     mean_queue_depth: float = 0.0
+    p95_queue_depth: float = 0.0
     straggler_dispatches: list = dataclasses.field(default_factory=list)
     #: what actually served (the Pallas plan summary when applicable)
     served: Optional[str] = None
@@ -183,17 +189,21 @@ class DesignEngine:
         """
         import jax
         t0 = time.perf_counter()
-        if source == "artifact":
-            import repro.hls as hls
-            self._design = hls.load(self.artifact_path)
-        self._run_one, served, fallbacks = self._design._runner(
-            self.backend, self.fmt, self.pallas_kw)
-        self._report.served = served
-        self._report.fallbacks = list(fallbacks)
-        for b in self.buckets:                       # pre-warm every shape
-            zeros = np.zeros((b,) + self._input_shape, np.float32)
-            jax.block_until_ready(self._run_one(self._as_backend_batch(zeros)))
+        with obs.span("serve.boot", cat="serve", source=source,
+                      backend=self.backend, buckets=list(self.buckets)):
+            if source == "artifact":
+                import repro.hls as hls
+                self._design = hls.load(self.artifact_path)
+            self._run_one, served, fallbacks = self._design._runner(
+                self.backend, self.fmt, self.pallas_kw)
+            self._report.served = served
+            self._report.fallbacks = list(fallbacks)
+            for b in self.buckets:                   # pre-warm every shape
+                zeros = np.zeros((b,) + self._input_shape, np.float32)
+                jax.block_until_ready(
+                    self._run_one(self._as_backend_batch(zeros)))
         boot_s = time.perf_counter() - t0
+        obs.inc("serve.boots")
         self._report.boot_s = boot_s
         self._report.boots.append(source)
         return boot_s
@@ -263,37 +273,67 @@ class DesignEngine:
             pad = np.zeros((bucket - len(reqs),) + self._input_shape,
                            np.float32)
             stacked = np.concatenate([stacked, pad])
-        t0 = time.perf_counter()
-        try:
-            self.injector.check(idx)
-            out = jax.block_until_ready(
-                self._run_one(self._as_backend_batch(stacked)))
-        except Exception as exc:
-            rep.restarts += 1
-            if rep.restarts > self.max_restarts:
+        obs.inc("serve.dispatches")
+        obs.inc("serve.padded_samples", bucket - len(reqs))
+        obs.observe("serve.batch_occupancy", len(reqs) / bucket)
+        with obs.span("serve.dispatch", cat="serve", dispatch=idx,
+                      n=len(reqs), bucket=bucket,
+                      padded=bucket - len(reqs)) as disp_sp:
+            t0 = time.perf_counter()
+            try:
+                self.injector.check(idx)
+                out = jax.block_until_ready(
+                    self._run_one(self._as_backend_batch(stacked)))
+            except Exception as exc:
+                rep.restarts += 1
+                obs.inc("serve.restarts")
+                disp_sp.set(error=type(exc).__name__)
+                if rep.restarts > self.max_restarts:
+                    for r in reqs:
+                        r.finish(error=exc)
+                    rep.dropped += len(reqs)
+                    obs.inc("serve.requests_dropped", len(reqs))
+                    self._record_request_spans(reqs, idx, bucket)
+                    self._finished.extend(reqs)
+                    return
+                keep = [r for r in reqs if r.retries < self.max_retries]
                 for r in reqs:
-                    r.finish(error=exc)
-                rep.dropped += len(reqs)
-                self._finished.extend(reqs)
+                    if r.retries >= self.max_retries:
+                        r.finish(error=exc)
+                        rep.dropped += 1
+                        obs.inc("serve.requests_dropped")
+                        self._record_request_spans([r], idx, bucket)
+                        self._finished.append(r)
+                rep.retried += len(keep)
+                self._queue.requeue_front(keep)
+                self._boot("artifact" if self.artifact_path else "memory")
                 return
-            keep = [r for r in reqs if r.retries < self.max_retries]
-            for r in reqs:
-                if r.retries >= self.max_retries:
-                    r.finish(error=exc)
-                    rep.dropped += 1
-                    self._finished.append(r)
-            rep.retried += len(keep)
-            self._queue.requeue_front(keep)
-            self._boot("artifact" if self.artifact_path else "memory")
-            return
-        dt = time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            disp_sp.set(compute_ms=round(dt * 1e3, 3))
         self.watchdog.observe(idx, dt)
+        rep.compute_s += dt
         rep.batch_hist[bucket] = rep.batch_hist.get(bucket, 0) + 1
         for i, r in enumerate(reqs):
             r.finish(result=self._split(out, i))
         rep.completed += len(reqs)
+        obs.inc("serve.requests_completed", len(reqs))
+        self._record_request_spans(reqs, idx, bucket)
         self._finished.extend(reqs)
         self._t_last = time.monotonic()
+
+    def _record_request_spans(self, reqs: list[QueuedRequest], idx: int,
+                              bucket: int) -> None:
+        """One async span per finished request (submit -> complete),
+        linked to its dispatch by the ``dispatch`` attribute."""
+        if not obs.enabled():
+            return
+        for r in reqs:
+            obs.record_span(
+                "serve.request", r.submit_t, r.done_t, cat="serve",
+                kind="async", rid=r.rid, dispatch=idx, bucket=bucket,
+                retries=r.retries, error=type(r.error).__name__
+                if r.error is not None else None,
+                queued_ms=round((r.start_t - r.submit_t) * 1e3, 3))
 
     def _dispatch_ready(self, *, flush: bool) -> bool:
         """Dispatch one batch if a trigger fired; True when work was done.
@@ -322,8 +362,17 @@ class DesignEngine:
 
     # -- threaded mode ------------------------------------------------------
 
+    #: dispatcher-loop queue-depth sampling interval (timer-driven, so
+    #: idle/ramp depth lands in the telemetry between dispatches)
+    DEPTH_SAMPLE_S = 0.005
+
     def _loop(self) -> None:
+        last_sample = time.monotonic()
         while True:
+            now = time.monotonic()
+            if now - last_sample >= self.DEPTH_SAMPLE_S:
+                last_sample = now
+                self._queue.sample_depth()
             if self._stop_evt.is_set():
                 if not self._dispatch_ready(flush=True):
                     return
@@ -371,11 +420,16 @@ class DesignEngine:
         rep.p95_ms = pct["p95"] * 1e3
         rep.p99_ms = pct["p99"] * 1e3
         rep.mean_ms = float(np.mean(lats)) * 1e3 if lats else 0.0
-        rep.max_queue_depth = self._queue.max_depth
-        rep.mean_queue_depth = round(self._queue.mean_depth, 2)
+        depth = self._queue.depth_stats()
+        rep.max_queue_depth = depth["max"]
+        rep.mean_queue_depth = round(depth["mean"], 2)
+        rep.p95_queue_depth = round(depth["p95"], 2)
         rep.straggler_dispatches = list(self.watchdog.stragglers)
         if self._t_first is not None and self._t_last is not None \
                 and self._t_last > self._t_first:
             rep.wall_s = self._t_last - self._t_first
             rep.qps = rep.completed / rep.wall_s
+        if rep.completed and rep.compute_s:
+            obs.gauge(f"serve.us_per_sample.{self.backend}",
+                      rep.compute_s / rep.completed * 1e6)
         return rep

@@ -141,15 +141,19 @@ def test_example_inputs_shape_checked():
 # ---------------------------------------------------------------------------
 
 
-def test_tune_persists_and_apply_tuned_loads(design, tmp_path, capsys):
+def test_tune_persists_and_apply_tuned_loads(design, tmp_path, caplog):
+    import logging
     from repro.tune import TuningDB, conv2d_space
     db = TuningDB(tmp_path / "db.json")
     space = conv2d_space()
 
-    # miss path is loud, not silent: names the probed DB path
-    same, cand = design.apply_tuned(space, db=db)
+    # miss path is loud, not silent: names the probed DB path (a WARNING
+    # on the repro logger since the print->logging conversion)
+    with caplog.at_level(logging.WARNING, logger="repro"):
+        same, cand = design.apply_tuned(space, db=db)
     assert same is design and cand is None
-    assert str(db.path) in capsys.readouterr().out
+    assert str(db.path) in caplog.text
+    caplog.clear()
 
     result = design.tune(space, strategy="random", budget=2, db=db, dry=True)
     assert len(result.trials) >= 1 and len(db) == 1   # auto-persisted
@@ -169,10 +173,11 @@ def test_tune_persists_and_apply_tuned_loads(design, tmp_path, capsys):
     # and a miss on an empty DB is loud, keeping the given config
     from repro.tune import TuningDB
     empty = TuningDB(tmp_path / "empty.json")
-    d4 = hls.compile(conv_build, session=design.session, tuned=space,
-                     db=empty)
+    with caplog.at_level(logging.WARNING, logger="repro"):
+        d4 = hls.compile(conv_build, session=design.session, tuned=space,
+                         db=empty)
     assert d4.tuned_candidate is None
-    assert str(empty.path) in capsys.readouterr().out
+    assert str(empty.path) in caplog.text
 
 
 # ---------------------------------------------------------------------------

@@ -217,3 +217,32 @@ def test_run_testbench_accepts_compiled_design():
     rep2 = verify.run_testbench("conv_tb", _small_build)
     assert rep2.passed
     assert rep2.makespan == rep.makespan
+
+
+def test_session_stats_accounting():
+    """hls.Session.stats() surfaces the DesignCache hit/miss counters and
+    the driver's recompile count with exact bookkeeping."""
+    import repro.hls as hls
+    s = hls.Session()
+    st0 = s.stats()
+    assert st0 == {"hits": 0, "misses": 0, "recompiles": 0,
+                   "memory_entries": 0, "pass_memo_entries": 0}
+
+    s.compile(_small_build, name="acct")          # cold: one miss
+    st1 = s.stats()
+    assert st1["misses"] == 1 and st1["hits"] == 0
+    assert st1["recompiles"] == 1
+    assert st1["memory_entries"] == 1
+
+    s.compile(_small_build, name="acct")          # warm: one hit, no compile
+    st2 = s.stats()
+    assert st2["hits"] == 1 and st2["misses"] == 1
+    assert st2["recompiles"] == 1                 # unchanged
+    assert st2["memory_entries"] == 1
+
+    # a config change is a genuine recompile, not a cache hit
+    s.compile(_small_build, name="acct",
+              config=CompilerConfig(pipeline=("cse", "dce")))
+    st3 = s.stats()
+    assert st3["misses"] == 2 and st3["recompiles"] == 2
+    assert st3["memory_entries"] == 2

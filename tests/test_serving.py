@@ -5,6 +5,8 @@ Design engine: adaptive batching, warm-boot artifacts, fault-tolerant
 replica restarts (the save/load + fault-injection acceptance criteria).
 """
 
+import time
+
 import jax
 import numpy as np
 import pytest
@@ -264,3 +266,61 @@ def test_serve_report_has_percentiles(bound_design, samples):
     report = bound_design.serve([batch] * 5, backend="tensor")
     assert report.p99_ms >= report.p95_ms >= report.p50_ms > 0.0
     assert "p50" in report.summary()
+
+
+# ---------------------------------------------------------------------------
+# percentiles() edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_percentiles_empty_returns_zeros():
+    from repro.serving.common import percentiles
+    assert percentiles([]) == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+
+
+def test_percentiles_single_sample_all_equal():
+    from repro.serving.common import percentiles
+    assert percentiles([7.5]) == {"p50": 7.5, "p95": 7.5, "p99": 7.5}
+
+
+def test_percentiles_filters_nan():
+    from repro.serving.common import percentiles
+    p = percentiles([1.0, float("nan"), 3.0])
+    assert p["p50"] == 2.0                        # nan dropped, not sorted-in
+    assert np.isfinite(p["p95"]) and np.isfinite(p["p99"])
+    # all-NaN degrades like empty rather than propagating NaN
+    assert percentiles([float("nan")] * 4) == \
+        {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# queue-depth telemetry (time-weighted, not sampled-at-dispatch-only)
+# ---------------------------------------------------------------------------
+
+
+def test_queue_depth_counts_idle_and_ramp_periods(bound_design, samples):
+    """A burst of 8 queued requests must report a max depth of 8 and a
+    time-weighted mean/p95 near the top, even though dispatch-time
+    sampling alone would see the queue only as it drains (mean ~4)."""
+    eng = bound_design.engine(backend="tensor", buckets=(1,))
+    for x in samples[:8]:
+        eng.submit(x)
+    time.sleep(0.25)          # the queue sits at depth 8 the whole time
+    eng.run_until_drained()
+    rep = eng.report()
+    assert rep.completed == 8
+    assert rep.max_queue_depth == 8
+    # the dwell at depth 8 dominates the drain transitions
+    assert rep.p95_queue_depth >= 7
+    assert rep.mean_queue_depth > 5
+
+
+def test_queue_depth_stats_unit():
+    from repro.serving.common import RequestQueue
+    q = RequestQueue()
+    # hand-build a step function: depth 2 for 1s, depth 10 for 9s
+    q.depth_events = [(0.0, 2), (1.0, 10), (10.0, 0)]
+    stats = q.depth_stats()
+    assert stats["max"] == 10.0
+    assert stats["mean"] == pytest.approx(0.1 * 2 + 0.9 * 10)
+    assert stats["p95"] == 10.0
