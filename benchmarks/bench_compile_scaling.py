@@ -1,0 +1,138 @@
+"""Compile-time scaling curve: conv2d -> BraggNN -> transformer block.
+
+The million-op compile path benchmark: per-phase compile wall time
+(trace / passes / schedule / partition) and end-to-end throughput
+(raw ops/s) across three workloads spanning ~3 orders of magnitude in
+graph size, everything through the public ``repro.hls`` surface.
+
+Also records two A/Bs on the largest workload, feeding the
+``compiler_scaling`` section of ``BENCH_<date>.json``:
+  * the scheduler: compiled-C ASAP core vs the pure-Python scalar core
+    (``REPRO_SCHED_SCALAR=1``) vs the per-``Op`` ``core.legacy`` path —
+    the headline schedule+partition speedup is measured against legacy,
+    the golden reference both fast paths are proven bit-identical to;
+  * the numpy-batched stage-partition DP vs the historical scalar DP.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import repro.hls as hls
+from repro import obs
+from repro.core import frontend
+from repro.core.schedule import (_partition_stages_scalar, list_schedule,
+                                 partition_stages)
+
+log = obs.get_logger(__name__)
+
+
+def _conv2d_build(ctx):
+    x = ctx.memref("input", (1, 2, 12, 12), "input")
+    w = ctx.memref("w", (8, 2, 3, 3), "weight")
+    b = ctx.memref("b", (8,), "weight")
+    out = ctx.memref("out", (1, 8, 10, 10), "output")
+    frontend.conv2d(ctx, x, w, b, out)
+
+
+def _workloads(fast: bool):
+    if fast:
+        return [
+            ("conv2d", _conv2d_build),
+            ("braggnn", lambda ctx: frontend.braggnn(ctx, s=1, img=9)),
+            ("transformer", lambda ctx: frontend.transformer_encoder_block(
+                ctx, seq=8, d_model=32, n_heads=4, ffn=64)),
+        ]
+    return [
+        ("conv2d", _conv2d_build),
+        ("braggnn", lambda ctx: frontend.braggnn(ctx, s=1, img=11)),
+        ("transformer", lambda ctx: frontend.transformer_encoder_block(
+            ctx, seq=16, d_model=64, n_heads=4, ffn=256)),
+    ]
+
+
+def _sched_ab(design) -> dict:
+    """C ASAP core vs forced-Python scalar core vs the per-``Op`` legacy
+    scheduler on the optimised graph (all three must agree)."""
+    from repro.core import legacy
+    g_opt = design.graph_opt
+    t0 = time.perf_counter()
+    s_c = list_schedule(g_opt)
+    c_s = time.perf_counter() - t0
+    os.environ["REPRO_SCHED_SCALAR"] = "1"
+    try:
+        t0 = time.perf_counter()
+        s_py = list_schedule(g_opt)
+        py_s = time.perf_counter() - t0
+    finally:
+        del os.environ["REPRO_SCHED_SCALAR"]
+    t0 = time.perf_counter()
+    s_l = legacy.list_schedule(g_opt)
+    legacy_s = time.perf_counter() - t0
+    assert s_c.makespan == s_py.makespan == s_l.makespan, \
+        "A/B paths disagree"
+    return {"c_path_s": round(c_s, 3), "python_scalar_s": round(py_s, 3),
+            "legacy_s": round(legacy_s, 3),
+            "speedup": round(py_s / c_s, 1) if c_s > 0 else None,
+            "speedup_vs_legacy":
+                round(legacy_s / c_s, 1) if c_s > 0 else None,
+            "makespan": s_c.makespan}
+
+
+def _partition_ab(design, n_stages: int = 3) -> dict:
+    g_opt, sched = design.graph_opt, design.schedule
+    t0 = time.perf_counter()
+    stages_v, ii_v = partition_stages(g_opt, sched, n_stages)
+    vec_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    stages_s, ii_s = _partition_stages_scalar(g_opt, sched, n_stages)
+    sca_s = time.perf_counter() - t0
+    assert ii_v == ii_s and stages_v == stages_s, "partition DPs disagree"
+    return {"vectorised_s": round(vec_s, 4), "scalar_s": round(sca_s, 4),
+            "speedup": round(sca_s / vec_s, 1) if vec_s > 0 else None,
+            "stage_ii": ii_v}
+
+
+def run(fast: bool = False) -> dict:
+    out: dict = {"workloads": []}
+    largest = largest_ops = None
+    for name, build in _workloads(fast):
+        session = hls.Session()       # private: measures cold compiles
+        design = session.compile(build, name=f"scaling_{name}")
+        tm = design.timings
+        total = tm.get("total_s") or (tm.get("trace_s", 0.0)
+                                      + tm.get("passes_s", 0.0)
+                                      + tm.get("schedule_s", 0.0))
+        ops_raw = len(design.graph_raw.ops)
+        row = {"name": name, "ops_raw": ops_raw,
+               "ops_opt": len(design.graph_opt.ops),
+               "trace_s": round(tm.get("trace_s", 0.0), 3),
+               "passes_s": round(tm.get("passes_s", 0.0), 3),
+               "schedule_s": round(tm.get("schedule_s", 0.0), 3),
+               "partition_s": round(tm.get("partition_s", 0.0), 4),
+               "total_s": round(total, 3),
+               "ops_per_s": round(ops_raw / total) if total > 0 else None}
+        out["workloads"].append(row)
+        log.info("# %s: %s raw ops, %.2fs total (%.0f ops/s)", name,
+                 f"{ops_raw:,}", total, row["ops_per_s"] or 0)
+        if largest_ops is None or ops_raw > largest_ops:
+            largest, largest_ops = design, ops_raw
+    out["sched_ab"] = _sched_ab(largest)
+    out["partition_ab"] = _partition_ab(largest)
+    log.info("# scheduler on largest graph: legacy %.2fs / python-scalar "
+             "%.2fs / C %.2fs (%.1fx vs legacy)",
+             out["sched_ab"]["legacy_s"],
+             out["sched_ab"]["python_scalar_s"],
+             out["sched_ab"]["c_path_s"],
+             out["sched_ab"]["speedup_vs_legacy"] or 0)
+    return out
+
+
+def main(fast: bool = False) -> dict:
+    return run(fast=fast)
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(main(), indent=1))

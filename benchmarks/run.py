@@ -13,6 +13,7 @@ so the perf trajectory across PRs is diffable.  Mapping to the paper:
     precision     — Fig. 7   (trained-weight exponents, accuracy sweep)
     roofline      — §Roofline (TPU adaptation; reads dry-run artifacts)
     serving       — deployment: sustained QPS / tail latency / warm boot
+    compile_scaling — compile-time curve conv2d -> BraggNN -> transformer
 
 Re-running the same day merges into the existing ``BENCH_<date>.json``:
 sections whose benchmark was skipped (``--only``) carry forward from the
@@ -108,6 +109,10 @@ def write_report(results: dict, args, out_path=None) -> pathlib.Path:
     if isinstance(srv, dict) and srv:
         # sustained QPS / tail latency / warm-boot trajectory
         serving = _jsonable(srv)
+    scaling = dict(old.get("compiler_scaling") or {})
+    sc = results.get("bench_compile_scaling", {}).get("result") or {}
+    if isinstance(sc, dict) and sc.get("workloads"):
+        scaling = _jsonable(sc)
     benchmarks = dict(old.get("benchmarks") or {})
     benchmarks.update(_jsonable(results))
     report = {
@@ -118,6 +123,7 @@ def write_report(results: dict, args, out_path=None) -> pathlib.Path:
         "compiler": compiler,
         "backends_us_per_sample": backends,
         "serving": serving,
+        "compiler_scaling": scaling,
         "benchmarks": benchmarks,
     }
     if obs.enabled():
@@ -202,6 +208,36 @@ def compare_serving(report: dict, path: pathlib.Path) -> None:
                  new_s.get(metric, "-"))
 
 
+def compare_compile_scaling(report: dict, path: pathlib.Path) -> None:
+    """Per-workload before/after diff of the ``compiler_scaling`` section
+    (compile-time curve + scheduler/partition A/Bs) against the most
+    recent other report."""
+    previous = sorted(p for p in REPO_ROOT.glob("BENCH_*.json")
+                      if p.resolve() != path.resolve())
+    new_c = report.get("compiler_scaling") or {}
+    if not (previous and new_c.get("workloads")):
+        return
+    try:
+        old = json.loads(previous[-1].read_text())
+    except (OSError, json.JSONDecodeError):
+        return
+    old_w = {w["name"]: w
+             for w in (old.get("compiler_scaling") or {}).get("workloads",
+                                                              [])}
+    log.info("# compile scaling vs %s:", previous[-1].name)
+    for w in new_c["workloads"]:
+        ow = old_w.get(w["name"]) or {}
+        log.info("#   %s (%s ops): total_s %s -> %s, ops/s %s -> %s",
+                 w["name"], f"{w['ops_raw']:,}", ow.get("total_s", "-"),
+                 w["total_s"], ow.get("ops_per_s", "-"), w["ops_per_s"])
+    ab = new_c.get("sched_ab") or {}
+    if ab:
+        log.info("#   scheduler A/B (largest): legacy %ss / python %ss / "
+                 "C %ss (%sx vs legacy)", ab.get("legacy_s", "-"),
+                 ab.get("python_scalar_s", "-"), ab.get("c_path_s", "-"),
+                 ab.get("speedup_vs_legacy", "-"))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -213,13 +249,13 @@ def main() -> None:
     args, _ = ap.parse_known_args()
     obs.setup_logging()
 
-    from benchmarks import (bench_braggnn, bench_layers, bench_precision,
-                            bench_roofline, bench_serving,
-                            bench_tool_runtime)
+    from benchmarks import (bench_braggnn, bench_compile_scaling,
+                            bench_layers, bench_precision, bench_roofline,
+                            bench_serving, bench_tool_runtime)
 
     todo = args.only.split(",") if args.only else [
         "layers", "tool_runtime", "braggnn", "precision", "roofline",
-        "serving"]
+        "serving", "compile_scaling"]
 
     results: dict = {}
     print("name,us_per_call,derived")
@@ -245,11 +281,16 @@ def main() -> None:
     if "serving" in todo:
         log.info("## deployment: serving engine under bursty load ##")
         _timed("bench_serving", results, bench_serving.main, fast=args.fast)
+    if "compile_scaling" in todo:
+        log.info("## compile-time scaling curve ##")
+        _timed("bench_compile_scaling", results, bench_compile_scaling.main,
+               fast=args.fast)
 
     path = write_report(results, args, args.out)
     report = json.loads(path.read_text())
     compare_with_previous(report, path)
     compare_serving(report, path)
+    compare_compile_scaling(report, path)
     log.info("# aggregate report: %s", path)
 
 

@@ -378,10 +378,11 @@ def _lower_module(module, *, fmt_obj, fmt_tuple, use_pallas: bool,
     from repro.core.precision import quantize
     from repro.nn import graph as nng
 
-    if module.input_shape[0] != 1:
+    if module.input_shape[0] != 1 and len(module.input_shape) != 2:
         raise ValueError(
             f"nest tier expects a per-sample memref input shape with a "
-            f"leading 1, got {module.input_shape}; use mode='dfg'")
+            f"leading 1 (image models) or a 2-D (L, D) sequence shape, "
+            f"got {module.input_shape}; use mode='dfg'")
 
     conv_e = kreg.for_pattern("Conv2d")
     mm_e = kreg.for_pattern("Linear")
@@ -487,6 +488,32 @@ def _lower_module(module, *, fmt_obj, fmt_tuple, use_pallas: bool,
                     (1, 1, node.kernel, node.kernel),
                     (1, 1, node.stride, node.stride), "VALID")
                 return jnp.maximum(y, 0.0) if fr else y
+        elif isinstance(node, nng.RMSNorm):
+            plan.fallbacks.append(f"{node.name}: RMSNorm via jnp")
+            pre = node.prefix
+
+            def step(x, w, pre=pre, node=node):
+                ga = w[f"{pre}.gamma"]
+                if fmt_obj is not None:
+                    x, ga = q(x), q(ga)
+                ms = jnp.sum(x * x, axis=-1, keepdims=True) \
+                    * (1.0 / x.shape[-1])
+                return q(x * (1.0 / jnp.sqrt(ms + node.eps)) * ga)
+            fuse_relu = False
+        elif isinstance(node, nng.Attention):
+            steps.append(_attention_step(node, mm_e, sm_e, fa_e, q,
+                                         fmt_obj, fmt_tuple, kw, nlb_flash,
+                                         plan))
+            step_labels.append(_node_label(node))
+            fuse_relu = False
+            i += 1
+            continue
+        elif isinstance(node, nng.MLP):
+            steps.append(_mlp_step(node, mm_e, q, fmt_obj, plan, kw))
+            step_labels.append(_node_label(node))
+            fuse_relu = False
+            i += 1
+            continue
         elif isinstance(node, (nng.ReLU, nng.OutputReLU)):
             def step(x, w):
                 return jnp.maximum(x, 0.0)
@@ -583,6 +610,94 @@ def _nlb_step(node, conv_e, sm_e, fa_e, q, fmt_tuple, kw, nlb_flash: bool,
     return step
 
 
+def _rms_jnp(x, gamma, eps, q):
+    import jax.numpy as jnp
+    ms = jnp.sum(x * x, axis=-1, keepdims=True) * (1.0 / x.shape[-1])
+    return q(x * (1.0 / jnp.sqrt(ms + eps)) * gamma)
+
+
+def _attention_step(node, mm_e, sm_e, fa_e, q, fmt_obj, fmt_tuple, kw,
+                    flash: bool, plan: PallasPlan):
+    """The Attention composite: optional pre-norm -> q/k/v projections
+    (matmul kernel) -> scaled scores -> softmax (Taylor kernel, or flash
+    attention in throughput mode) -> mix -> out-projection -> residual."""
+    import jax.numpy as jnp
+
+    pre = node.prefix
+    h, dh = node.n_heads, node.head_dim
+    eb = fmt_obj.exp_bits if fmt_obj is not None else None
+    mb = fmt_obj.man_bits if fmt_obj is not None else None
+    use_flash = flash and fmt_tuple is None
+    plan.record_kernel(mm_e.name)            # q/k/v and out projections
+    if use_flash:
+        plan.record_kernel(fa_e.name)
+        plan.notes.append(
+            f"{node.name}: flash-attention throughput mode — true-exp "
+            f"softmax, not the order-{node.taylor_order} Taylor model")
+    else:
+        plan.record_kernel(sm_e.name)
+
+    def step(x, w):
+        b, l, d = x.shape
+        src = x
+        if node.pre_norm:
+            ga = w[f"{pre}.norm.gamma"]
+            if fmt_obj is not None:
+                src, ga = q(src), q(ga)
+            src = _rms_jnp(src, ga, node.eps, q)
+        x2 = src.reshape(b * l, d)
+
+        def proj(nm):                        # (B*L, D) @ (D, H*dh)
+            wk_ = w[f"{pre}.{nm}.kernel"].reshape(d, h * dh)
+            y = mm_e.fn(x2, wk_, None, exp_bits=eb, man_bits=mb, **kw)
+            return q(y).reshape(b, l, h, dh)
+
+        qh, kh, vh = proj("q"), proj("k"), proj("v")
+        if use_flash:
+            # flash divides logits by sqrt(dh) — exactly the DFG's scale
+            y = fa_e.fn(qh, kh, vh, causal=False, **kw)
+        else:
+            scores = q(jnp.einsum("bshk,bthk->bhst", qh, kh)
+                       * (1.0 / jnp.sqrt(jnp.float32(dh))))
+            attn = sm_e.fn(scores, taylor_order=node.taylor_order, **kw)
+            y = q(jnp.einsum("bhst,bthk->bshk", attn, vh))
+        wo = w[f"{pre}.o.kernel"].reshape(h * dh, d)
+        z = q(mm_e.fn(y.reshape(b * l, h * dh), wo, None,
+                      exp_bits=eb, man_bits=mb, **kw)).reshape(b, l, d)
+        return q(x + z) if node.residual else z
+
+    return step
+
+
+def _mlp_step(node, mm_e, q, fmt_obj, plan: PallasPlan, kw):
+    """The MLP composite: optional pre-norm -> fc1+ReLU -> fc2 -> residual,
+    both matmuls through the smallfloat kernel (ReLU fused into fc1)."""
+    pre = node.prefix
+    eb = fmt_obj.exp_bits if fmt_obj is not None else None
+    mb = fmt_obj.man_bits if fmt_obj is not None else None
+    plan.record_kernel(mm_e.name + ":relu")  # fc1
+    plan.record_kernel(mm_e.name)            # fc2
+
+    def step(x, w):
+        b, l, d = x.shape
+        src = x
+        if node.pre_norm:
+            ga = w[f"{pre}.norm.gamma"]
+            if fmt_obj is not None:
+                src, ga = q(src), q(ga)
+            src = _rms_jnp(src, ga, node.eps, q)
+        x2 = src.reshape(b * l, d)
+        h1 = q(mm_e.fn(x2, w[f"{pre}.fc1.weight"].T,
+                       w[f"{pre}.fc1.bias"], exp_bits=eb, man_bits=mb,
+                       fuse_relu=True, **kw))
+        z = q(mm_e.fn(h1, w[f"{pre}.fc2.weight"].T,
+                      w[f"{pre}.fc2.bias"], exp_bits=eb, man_bits=mb,
+                      **kw)).reshape(b, l, d)
+        return q(x + z) if node.residual else z
+
+    return step
+
+
 # ---------------------------------------------------------------------------
 # Front door
 # ---------------------------------------------------------------------------
@@ -653,8 +768,9 @@ def to_pallas_fn(g: Graph, *, module=None, fmt=None, mode: str = "auto",
             x = np.asarray(feeds[in_name], dtype=np.float32)
             if x.ndim == rank:                    # unbatched sample
                 x = x[None]
-            # collapse the loop-nest's per-sample singleton batch axis
-            x = x.reshape((x.shape[0],) + in_shape[1:])
+            if in_shape[0] == 1:
+                # collapse the loop-nest's per-sample singleton batch axis
+                x = x.reshape((x.shape[0],) + in_shape[1:])
             w = {name: np.asarray(feeds[name], dtype=np.float32)
                  for name in weight_names}
             wn = _normalize_weights(w, module)

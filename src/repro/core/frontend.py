@@ -350,3 +350,192 @@ def braggnn(ctx: Context, *, s: int = 1, img: int = 11,
     for idx in list(out_mem.table.keys()):
         with ctx.sequential(label="dense.final_relu"):
             out_mem.table[idx] = ctx.relu(out_mem.table[idx])
+
+
+# ---------------------------------------------------------------------------
+# Transformer encoder block layers (sequence-model vocabulary)
+# ---------------------------------------------------------------------------
+
+def rms_norm(ctx: Context, inp: MemRef, gamma: MemRef, out: MemRef, *,
+             eps: float = 1e-5, label: str = "rms_norm") -> None:
+    """RMS normalisation over the last axis: out = x * gamma / rms(x).
+
+    inp/out: (L, D), gamma: (D,).  Three nests: a row-parallel
+    sum-of-squares reduction, a row-parallel reciprocal-rms
+    (1/sqrt(ms/D + eps)), and an element-parallel scale.  The sequential
+    square-sum chain is balanced by the reduction-tree pass.
+    """
+    l, d = inp.shape
+    assert tuple(out.shape) == (l, d), (inp.shape, out.shape)
+    assert tuple(gamma.shape) == (d,), gamma.shape
+
+    ms = ctx.temp(f"{label}_ms_{id(inp)}", (l,))
+    for idx in ctx.parallel(l, label=f"{label}.ss"):
+        acc: Optional[SymVal] = None
+        for j in range(d):
+            x = inp[idx + (j,)]
+            t = x * x
+            acc = t if acc is None else acc + t
+        assert acc is not None
+        ms[idx] = acc
+
+    rinv = ctx.temp(f"{label}_rinv_{id(inp)}", (l,))
+    one = ctx.const(1.0)
+    inv_d = ctx.const(1.0 / d)
+    c_eps = ctx.const(eps)
+    for idx in ctx.parallel(l, label=f"{label}.rinv"):
+        rinv[idx] = one / (ms[idx] * inv_d + c_eps).sqrt()
+
+    for (i, j) in ctx.parallel(l, d, label=f"{label}.scale"):
+        out[i, j] = inp[i, j] * rinv[i] * gamma[j]
+
+
+def attention(ctx: Context, inp: MemRef, wq: MemRef, wk: MemRef, wv: MemRef,
+              wo: MemRef, out: MemRef, *, n_heads: int,
+              taylor_order: int = 8, label: str = "attn") -> None:
+    """Multi-head bidirectional self-attention (encoder form, no mask).
+
+    inp/out: (L, D); wq/wk/wv: (D, H, dh); wo: (H, dh, D) with D = H*dh
+    (the ``repro.nn.attention.attn_specs`` layout).  Scores are scaled by
+    1/sqrt(dh) and softmaxed per head-row with the paper's Taylor-exp
+    functional model (:func:`soft_max` on an (H*L, L) memref).
+    """
+    import math
+
+    l, d = inp.shape
+    h = n_heads
+    dh = d // h
+    assert h * dh == d, (d, h)
+    assert tuple(out.shape) == (l, d), out.shape
+    for w in (wq, wk, wv):
+        assert tuple(w.shape) == (d, h, dh), w.shape
+    assert tuple(wo.shape) == (h, dh, d), wo.shape
+
+    # q/k/v projections: (L, D) x (D, H, dh) -> (L, H, dh)
+    proj = {}
+    for nm, w in (("q", wq), ("k", wk), ("v", wv)):
+        o = ctx.temp(f"{label}_{nm}_{id(inp)}", (l, h, dh))
+        for (i, hh, kk) in ctx.parallel(l, h, dh, label=f"{label}.{nm}"):
+            acc: Optional[SymVal] = None
+            for p in range(d):
+                t = inp[i, p] * w[p, hh, kk]
+                acc = t if acc is None else acc + t
+            assert acc is not None
+            o[i, hh, kk] = acc
+        proj[nm] = o
+    q, k, v = proj["q"], proj["k"], proj["v"]
+
+    # scores[h*L + i, j] = (q_i . k_j) / sqrt(dh), one softmax row per
+    # (head, query) pair so soft_max sees a plain 2-D memref
+    scale = ctx.const(1.0 / math.sqrt(dh))
+    scores = ctx.temp(f"{label}_scores_{id(inp)}", (h * l, l))
+    for (hh, i, j) in ctx.parallel(h, l, l, label=f"{label}.scores"):
+        acc = None
+        for kk in range(dh):
+            t = q[i, hh, kk] * k[j, hh, kk]
+            acc = t if acc is None else acc + t
+        assert acc is not None
+        scores[hh * l + i, j] = acc * scale
+
+    attn = ctx.temp(f"{label}_attn_{id(inp)}", (h * l, l))
+    soft_max(ctx, scores, attn, taylor_order=taylor_order,
+             label=f"{label}.soft")
+
+    # per-head mix: y[i, h, k] = sum_j attn[h*L + i, j] * v[j, h, k]
+    y = ctx.temp(f"{label}_y_{id(inp)}", (l, h, dh))
+    for (i, hh, kk) in ctx.parallel(l, h, dh, label=f"{label}.mix"):
+        acc = None
+        for j in range(l):
+            t = attn[hh * l + i, j] * v[j, hh, kk]
+            acc = t if acc is None else acc + t
+        assert acc is not None
+        y[i, hh, kk] = acc
+
+    # out-projection back to (L, D)
+    for (i, dd) in ctx.parallel(l, d, label=f"{label}.out"):
+        acc = None
+        for hh in range(h):
+            for kk in range(dh):
+                t = y[i, hh, kk] * wo[hh, kk, dd]
+                acc = t if acc is None else acc + t
+        assert acc is not None
+        out[i, dd] = acc
+
+
+def mlp(ctx: Context, inp: MemRef, w1: MemRef, b1: MemRef, w2: MemRef,
+        b2: MemRef, out: MemRef, *, label: str = "mlp") -> None:
+    """Position-wise feed-forward: relu(x @ w1.T + b1) @ w2.T + b2.
+
+    inp/out: (L, D); w1: (hidden, D), w2: (D, hidden) — the
+    :func:`linear` (N, K) weight layout applied per sequence position.
+    """
+    l, d = inp.shape
+    hidden, d2 = w1.shape
+    assert d == d2, (inp.shape, w1.shape)
+    assert tuple(w2.shape) == (d, hidden), w2.shape
+    assert tuple(out.shape) == (l, d), out.shape
+
+    hid = ctx.temp(f"{label}_fc1_{id(inp)}", (l, hidden))
+    linear(ctx, inp, w1, b1, hid, label=f"{label}.fc1")
+    act = ctx.temp(f"{label}_act_{id(inp)}", (l, hidden))
+    relu_layer(ctx, hid, act, label=f"{label}.act")
+    linear(ctx, act, w2, b2, out, label=f"{label}.fc2")
+
+
+def add_residual(ctx: Context, a: MemRef, b: MemRef, out: MemRef, *,
+                 label: str = "residual") -> None:
+    """Elementwise residual add: out = a + b."""
+    assert tuple(a.shape) == tuple(b.shape) == tuple(out.shape)
+    for idx in ctx.parallel(*a.shape, label=label):
+        out[idx] = a[idx] + b[idx]
+
+
+def transformer_encoder_block(ctx: Context, *, seq: int = 16,
+                              d_model: int = 64, n_heads: int = 4,
+                              ffn: int = 256, taylor_order: int = 8,
+                              eps: float = 1e-5) -> None:
+    """A whisper_tiny-shaped pre-norm transformer encoder block.
+
+        x = x + Attn(RMS(x));  x = x + MLP(RMS(x));  out = RMS(x)
+
+    Weight memref names and nest labels match the nn-module bridge
+    (``Attention("attn") / MLP("mlp") / RMSNorm("ln_post")`` through
+    ``repro.hls.bridge``), which therefore emits a bit-identical DFG —
+    the same contract :func:`braggnn` keeps with its module twin.
+    """
+    dh = d_model // n_heads
+    assert n_heads * dh == d_model, (d_model, n_heads)
+
+    x = ctx.memref("input", (seq, d_model), "input")
+
+    # --- attention sub-block ------------------------------------------------
+    g1 = ctx.memref("attn.norm.gamma", (d_model,), "weight")
+    n1 = ctx.temp("attn_norm", (seq, d_model))
+    rms_norm(ctx, x, g1, n1, eps=eps, label="attn.norm")
+    wq = ctx.memref("attn.q.kernel", (d_model, n_heads, dh), "weight")
+    wk = ctx.memref("attn.k.kernel", (d_model, n_heads, dh), "weight")
+    wv = ctx.memref("attn.v.kernel", (d_model, n_heads, dh), "weight")
+    wo = ctx.memref("attn.o.kernel", (n_heads, dh, d_model), "weight")
+    mix = ctx.temp("attn_mix", (seq, d_model))
+    attention(ctx, n1, wq, wk, wv, wo, mix, n_heads=n_heads,
+              taylor_order=taylor_order, label="attn")
+    r1 = ctx.temp("attn_out", (seq, d_model))
+    add_residual(ctx, mix, x, r1, label="attn.residual")
+
+    # --- MLP sub-block ------------------------------------------------------
+    g2 = ctx.memref("mlp.norm.gamma", (d_model,), "weight")
+    n2 = ctx.temp("mlp_norm", (seq, d_model))
+    rms_norm(ctx, r1, g2, n2, eps=eps, label="mlp.norm")
+    w1 = ctx.memref("mlp.fc1.weight", (ffn, d_model), "weight")
+    b1 = ctx.memref("mlp.fc1.bias", (ffn,), "weight")
+    w2 = ctx.memref("mlp.fc2.weight", (d_model, ffn), "weight")
+    b2 = ctx.memref("mlp.fc2.bias", (d_model,), "weight")
+    m = ctx.temp("mlp_fc", (seq, d_model))
+    mlp(ctx, n2, w1, b1, w2, b2, m, label="mlp")
+    r2 = ctx.temp("mlp_out", (seq, d_model))
+    add_residual(ctx, m, r1, r2, label="mlp.residual")
+
+    # --- final norm writes the output ---------------------------------------
+    g3 = ctx.memref("ln_post.gamma", (d_model,), "weight")
+    out = ctx.memref("ln_post_out", (seq, d_model), "output")
+    rms_norm(ctx, r2, g3, out, eps=eps, label="ln_post")

@@ -27,7 +27,7 @@ import itertools
 from contextlib import contextmanager
 from typing import Iterator, Optional, Sequence, Union
 
-from repro.core.ir import OPCODE_ID, Graph
+from repro.core.ir import OPCODE_ID, TRACE_CHUNK, Graph
 
 Number = Union[int, float]
 
@@ -276,6 +276,8 @@ class Context:
         ai.append(g.intern_array(array) if array else 0)
         g._n_ops += 1
         g._cols = None
+        if len(o) >= TRACE_CHUNK:
+            g._flush_chunk()
         return SymVal(self, result)
 
     # -- memrefs ------------------------------------------------------------

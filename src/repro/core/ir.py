@@ -72,6 +72,14 @@ OPCODE_ID: dict[str, int] = {name: i for i, name in enumerate(OPCODES)}
 N_OPCODES = len(OPCODES)
 MAX_ARGS = 3
 
+#: Build-form chunk size: every this-many appended ops, the tail lists are
+#: frozen into dense ``int32`` chunk arrays (:meth:`Graph._flush_chunk`), so
+#: a multi-million-op trace holds at most one chunk of boxed Python ints at
+#: a time (~8 MB of arrays per 64k ops vs ~28 bytes per boxed int per
+#: column) and ``cols()`` concatenates arrays instead of converting giant
+#: lists.
+TRACE_CHUNK = 1 << 16
+
 #: Pipeline depth (cycles @ 10 ns) per op.  Calibrated against FloPoCo
 #: (5,11)/(5,4) core latencies reported in the FloPoCo literature and tuned
 #: so that the scheduled BraggNN(s=1) lands in the neighbourhood of the
@@ -289,6 +297,10 @@ class Graph:
         # interned array id.  ``None`` when the graph lives in sealed form.
         self._lists: Optional[tuple[list, ...]] = (
             [], [], [], [], [], [], [], [])
+        # frozen prefix of the build form: every TRACE_CHUNK appends, the
+        # tail lists flush into dense int32 arrays so tracing a multi-
+        # million-op graph never holds more than one chunk of boxed ints
+        self._chunks: list[tuple[np.ndarray, ...]] = []
         self._cols: Optional[GraphCols] = None
         self._n_ops: int = 0
         # interned memref-name table; id 0 is the empty name
@@ -331,6 +343,30 @@ class Graph:
                 c.result.tolist(), c.nest.tolist(), c.rank.tolist(),
                 c.array_id.tolist())
 
+    def _flush_chunk(self) -> None:
+        """Freeze the current build-list tail into int32 chunk arrays.
+
+        The lists are cleared *in place* — ``Context._emit`` holds direct
+        references to the list objects within a call.
+        """
+        lists = self._lists
+        self._chunks.append(tuple(np.asarray(col, dtype=np.int32)
+                                  for col in lists))
+        for col in lists:
+            col.clear()
+
+    def _merge_chunks(self) -> None:
+        """Fold frozen chunks back into the build lists (rare: list-form
+        mutation of a mid-trace graph)."""
+        if not self._chunks:
+            return
+        for k, col in enumerate(self._lists):
+            head = np.concatenate(
+                [ch[k] for ch in self._chunks]).tolist()
+            head.extend(col)
+            col[:] = head  # in place: _emit may hold references
+        self._chunks = []
+
     def _mutable_lists(self) -> tuple[list, ...]:
         """The build-form columns, thawing from sealed form if needed.
 
@@ -339,6 +375,8 @@ class Graph:
         """
         if self._lists is None:
             self._lists = self._thaw()
+        else:
+            self._merge_chunks()
         return self._lists
 
     def _lists_view(self) -> tuple[list, ...]:
@@ -347,25 +385,44 @@ class Graph:
         Read-only: a sealed graph thaws a *transient* copy that the view
         caches for its own lifetime — the graph keeps single (array)
         storage, so big cached designs don't retain boxed-int columns after
-        someone iterates ``g.ops`` once.
+        someone iterates ``g.ops`` once.  A mid-trace chunked graph likewise
+        merges into a transient copy, leaving the chunk storage intact.
         """
-        return self._lists if self._lists is not None else self._thaw()
+        if self._lists is None:
+            return self._thaw()
+        if self._chunks:
+            merged = []
+            for k, col in enumerate(self._lists):
+                head = np.concatenate(
+                    [ch[k] for ch in self._chunks]).tolist()
+                head.extend(col)
+                merged.append(head)
+            return tuple(merged)
+        return self._lists
 
     def cols(self) -> GraphCols:
         """Seal and return the dense column arrays (cached until mutation)."""
         if self._cols is None:
-            o, a0, a1, a2, r, ne, rk, ai = self._lists
-            opcode = np.asarray(o, dtype=np.int32)
+            if self._chunks:
+                tail = tuple(np.asarray(col, dtype=np.int32)
+                             for col in self._lists)
+                o, a0, a1, a2, r, ne, rk, ai = (
+                    np.concatenate([ch[k] for ch in self._chunks]
+                                   + [tail[k]])
+                    for k in range(len(tail)))
+                self._chunks = []
+            else:
+                o, a0, a1, a2, r, ne, rk, ai = (
+                    np.asarray(col, dtype=np.int32) for col in self._lists)
+            opcode = o
             args = np.empty((len(opcode), MAX_ARGS), dtype=np.int32)
             args[:, 0] = a0
             args[:, 1] = a1
             args[:, 2] = a2
-            result = np.asarray(r, dtype=np.int32)
+            result = r
             self._cols = GraphCols(
                 opcode=opcode, args=args, result=result,
-                nest=np.asarray(ne, dtype=np.int32),
-                rank=np.asarray(rk, dtype=np.int32),
-                array_id=np.asarray(ai, dtype=np.int32),
+                nest=ne, rank=rk, array_id=ai,
                 producer=_producer_from(result, self.n_values))
             # sealed graphs drop the build lists (thawed back on demand by
             # the Op view or a later add_op) — no dual storage for the big
@@ -467,6 +524,8 @@ class Graph:
         ai.append(self.intern_array(array) if array else 0)
         self._n_ops += 1
         self._cols = None
+        if len(o) >= TRACE_CHUNK:
+            self._flush_chunk()
         return result
 
     def add_const(self, value: float) -> int:

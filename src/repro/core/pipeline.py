@@ -665,9 +665,15 @@ class CompilerDriver:
         self.cache = cache or DesignCache(cache_dir)
         #: full (non-cache-served) builds this driver has performed
         self.recompiles = 0
+        #: pass-stage memo hits (builds that skipped the pass pipeline)
+        self.pass_memo_hits = 0
         # pass-stage memo: (graph fingerprint, cfg.pass_key()) -> optimised
         # graph + reports.  Configs differing only in schedule knobs reuse
         # the (expensive) pass stage — the design-space explorer's hot path.
+        # Precision-only tune candidates go one better: ``precision`` is not
+        # a ``CompilerConfig`` field at all (``SearchSpace.to_config`` drops
+        # it), so a precision step re-uses the *whole* cached design, not
+        # just the pass stage (asserted by ``tests/test_tune.py``).
         self._opt_memo: dict[tuple[str, str],
                              tuple[Graph, list[PassReport]]] = {}
 
@@ -717,6 +723,7 @@ class CompilerDriver:
                           memo=memoised is not None) as sp:
                 if memoised is not None:
                     g_opt, reports = memoised
+                    self.pass_memo_hits += 1
                     obs.inc("compile.pass_memo_hits")
                 else:
                     g_opt, reports = cfg.pass_manager().run(g_raw)
@@ -730,12 +737,23 @@ class CompilerDriver:
                           design=name) as sp:
                 sched = list_schedule(g_opt, params=cfg.schedule_params())
                 stages = stage_ii = None
+                timings["partition_s"] = 0.0
                 if cfg.n_stages > 1:
-                    stages, stage_ii = partition_stages(g_opt, sched,
-                                                        cfg.n_stages)
+                    tp = time.perf_counter()
+                    with obs.span("compile.partition", cat="compile",
+                                  design=name, n_stages=cfg.n_stages) as psp:
+                        stages, stage_ii = partition_stages(g_opt, sched,
+                                                            cfg.n_stages)
+                        psp.set(stage_ii=stage_ii)
+                    timings["partition_s"] = time.perf_counter() - tp
                 sp.set(makespan=sched.makespan, stage_ii=stage_ii)
             timings["schedule_s"] = time.perf_counter() - t0
-            timings["total_s"] = sum(timings.values())
+            # partition_s is a sub-timing of schedule_s, not an extra stage
+            timings["total_s"] = (timings["trace_s"] + timings["passes_s"]
+                                  + timings["schedule_s"])
+            if timings["total_s"] > 0:
+                obs.gauge("compiler.ops_per_s",
+                          len(g_raw.ops) / timings["total_s"])
             compile_sp.set(cached=False, design_hash=key[:12],
                            ops_raw=len(g_raw.ops), ops_opt=len(g_opt.ops),
                            makespan=sched.makespan,

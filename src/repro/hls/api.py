@@ -705,7 +705,8 @@ class Session:
                 "misses": self.driver.cache.misses,
                 "recompiles": self.driver.recompiles,
                 "memory_entries": len(self.driver.cache.memory),
-                "pass_memo_entries": len(self.driver._opt_memo)}
+                "pass_memo_entries": len(self.driver._opt_memo),
+                "pass_memo_hits": self.driver.pass_memo_hits}
 
 
 #: process-default sessions, one per cache location ("" = memory-only)

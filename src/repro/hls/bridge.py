@@ -19,9 +19,9 @@ from typing import Callable
 
 from repro.core import frontend
 from repro.core.interp import Context, MemRef
-from repro.nn.graph import (BatchNorm2d, Conv2d, Flatten, Linear, MaxPool2d,
-                            ModuleGraph, NonLocalBlock, OutputReLU, ReLU,
-                            Softmax)
+from repro.nn.graph import (MLP, Attention, BatchNorm2d, Conv2d, Flatten,
+                            Linear, MaxPool2d, ModuleGraph, NonLocalBlock,
+                            OutputReLU, ReLU, RMSNorm, Softmax)
 
 
 def _emit_conv2d(ctx: Context, node: Conv2d, cur: MemRef,
@@ -109,6 +109,62 @@ def _emit_flatten(ctx: Context, node: Flatten, cur: MemRef,
     return out
 
 
+def _emit_rms_norm(ctx: Context, node: RMSNorm, cur: MemRef,
+                   shape: tuple, kind: str) -> MemRef:
+    gamma = ctx.memref(f"{node.prefix}.gamma", (shape[-1],), "weight")
+    out = ctx.memref(node.out_name, node.out_shape(shape), kind)
+    frontend.rms_norm(ctx, cur, gamma, out, eps=node.eps, label=node.label)
+    return out
+
+
+def _emit_attention(ctx: Context, node: Attention, cur: MemRef,
+                    shape: tuple, kind: str) -> MemRef:
+    l, d = shape
+    h, dh = node.n_heads, node.head_dim
+    src = cur
+    if node.pre_norm:
+        gamma = ctx.memref(f"{node.prefix}.norm.gamma", (d,), "weight")
+        src = ctx.temp(f"{node.name}_norm", (l, d))
+        frontend.rms_norm(ctx, cur, gamma, src, eps=node.eps,
+                          label=f"{node.label}.norm")
+    wq = ctx.memref(f"{node.prefix}.q.kernel", (d, h, dh), "weight")
+    wk = ctx.memref(f"{node.prefix}.k.kernel", (d, h, dh), "weight")
+    wv = ctx.memref(f"{node.prefix}.v.kernel", (d, h, dh), "weight")
+    wo = ctx.memref(f"{node.prefix}.o.kernel", (h, dh, d), "weight")
+    mix = ctx.temp(f"{node.name}_mix", (l, d)) if node.residual \
+        else ctx.memref(node.out_name, (l, d), kind)
+    frontend.attention(ctx, src, wq, wk, wv, wo, mix, n_heads=h,
+                       taylor_order=node.taylor_order, label=node.label)
+    if not node.residual:
+        return mix
+    out = ctx.memref(node.out_name, (l, d), kind)
+    frontend.add_residual(ctx, mix, cur, out, label=f"{node.label}.residual")
+    return out
+
+
+def _emit_mlp(ctx: Context, node: MLP, cur: MemRef,
+              shape: tuple, kind: str) -> MemRef:
+    l, d = shape
+    src = cur
+    if node.pre_norm:
+        gamma = ctx.memref(f"{node.prefix}.norm.gamma", (d,), "weight")
+        src = ctx.temp(f"{node.name}_norm", (l, d))
+        frontend.rms_norm(ctx, cur, gamma, src, eps=node.eps,
+                          label=f"{node.label}.norm")
+    w1 = ctx.memref(f"{node.prefix}.fc1.weight", (node.hidden, d), "weight")
+    b1 = ctx.memref(f"{node.prefix}.fc1.bias", (node.hidden,), "weight")
+    w2 = ctx.memref(f"{node.prefix}.fc2.weight", (d, node.hidden), "weight")
+    b2 = ctx.memref(f"{node.prefix}.fc2.bias", (d,), "weight")
+    fc = ctx.temp(f"{node.name}_fc", (l, d)) if node.residual \
+        else ctx.memref(node.out_name, (l, d), kind)
+    frontend.mlp(ctx, src, w1, b1, w2, b2, fc, label=node.label)
+    if not node.residual:
+        return fc
+    out = ctx.memref(node.out_name, (l, d), kind)
+    frontend.add_residual(ctx, fc, cur, out, label=f"{node.label}.residual")
+    return out
+
+
 _EMITTERS: dict[type, Callable] = {
     Conv2d: _emit_conv2d,
     Linear: _emit_linear,
@@ -119,6 +175,9 @@ _EMITTERS: dict[type, Callable] = {
     Softmax: _emit_softmax,
     NonLocalBlock: _emit_nlb,
     Flatten: _emit_flatten,
+    RMSNorm: _emit_rms_norm,
+    Attention: _emit_attention,
+    MLP: _emit_mlp,
 }
 
 

@@ -98,7 +98,7 @@ def _register_exemplars() -> None:
         fn=_mm_ops.matmul,
         kernel=_mm_mod.smallfloat_matmul,
         oracle=_mm_ref.smallfloat_matmul_ref,
-        accelerates=("Linear",),
+        accelerates=("Linear", "MLP", "Attention.proj"),
         description="blocked matmul, fp32 accumulate, optional (wE,wF) "
                     "operand quantisation + fused bias/ReLU"))
     register(KernelEntry(
@@ -106,7 +106,7 @@ def _register_exemplars() -> None:
         fn=_sm_ops.softmax,
         kernel=_sm_mod.fused_softmax,
         oracle=_sm_ref.fused_softmax_ref,
-        accelerates=("Softmax", "nlb.soft"),
+        accelerates=("Softmax", "nlb.soft", "Attention.soft"),
         description="row softmax in one VMEM residency, incl. the paper's "
                     "Taylor-exp mode (matches the DFG functional model)"))
     register(KernelEntry(
@@ -114,7 +114,7 @@ def _register_exemplars() -> None:
         fn=_fa_ops.attention,
         kernel=_fa_mod.flash_attention,
         oracle=_fa_ref.flash_attention_ref,
-        accelerates=("NonLocalBlock.attention",),
+        accelerates=("NonLocalBlock.attention", "Attention"),
         description="blockwise attention; NLB throughput mode "
                     "(true-exp softmax — not the Taylor functional model)"))
 

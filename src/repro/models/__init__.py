@@ -1,5 +1,5 @@
-"""Assembled models: causal LM, BraggNN, encoder-decoder."""
+"""Assembled models: causal LM, BraggNN, encoder-decoder, transformer block."""
 
-from repro.models import braggnn, encdec, lm
+from repro.models import braggnn, encdec, lm, transformer
 
-__all__ = ["braggnn", "encdec", "lm"]
+__all__ = ["braggnn", "encdec", "lm", "transformer"]

@@ -2,8 +2,9 @@
 
 A ``ModuleGraph`` is an ordered list of layer nodes (the BraggNN vocabulary:
 conv2d, linear, batch-norm, relu, max-pool, softmax, the non-local attention
-block) plus the model's input memref shape.  One description serves every
-consumer:
+block — plus the sequence-model vocabulary: rms-norm, multi-head attention,
+position-wise MLP) and the model's input memref shape.  One description
+serves every consumer:
 
   * ``repro.hls.bridge`` walks it and emits the corresponding
     ``repro.core.frontend`` loop nests — the nn -> loop-nest auto-lowering
@@ -336,9 +337,164 @@ class Flatten(Node):
         return (in_shape[0], n)
 
 
+@dataclasses.dataclass(frozen=True)
+class RMSNorm(Node):
+    """RMS normalisation over the last axis (``frontend.rms_norm``)."""
+
+    dim: int = 0
+    eps: float = 1e-5
+    prefix_: Optional[str] = None
+    label_: Optional[str] = None
+    out_name_: Optional[str] = None
+
+    @property
+    def prefix(self) -> str:
+        return self.prefix_ or self.name
+
+    @property
+    def label(self) -> str:
+        return self.label_ or self.name
+
+    @property
+    def out_name(self) -> str:
+        return self.out_name_ or f"{self.name}_out"
+
+    def param_specs(self) -> dict:
+        return {"gamma": ParamSpec((self.dim,), (None,), init="ones")}
+
+    def weight_memrefs(self) -> dict[str, tuple[str, ...]]:
+        return {f"{self.prefix}.gamma": ("gamma",)}
+
+    def out_shape(self, in_shape):
+        l, d = in_shape
+        assert d == self.dim, (in_shape, self)
+        return in_shape
+
+
+@dataclasses.dataclass(frozen=True)
+class Attention(Node):
+    """Pre-norm residual multi-head self-attention (``frontend.attention``).
+
+    Operates on (L, d_model) sequence memrefs.  With ``pre_norm`` the node
+    applies an RMS norm before the attention body; with ``residual`` the
+    input is added back after the out-projection — so the default node is
+    the whole ``x + Attn(RMS(x))`` sub-block and a sequential node chain
+    stays linear.  Weights follow the ``repro.nn.attention.attn_specs``
+    layout (q/k/v kernels (D, H, dh), o kernel (H, dh, D)).
+    """
+
+    d_model: int = 0
+    n_heads: int = 0
+    taylor_order: int = 8
+    eps: float = 1e-5
+    pre_norm: bool = True
+    residual: bool = True
+    prefix_: Optional[str] = None
+    label_: Optional[str] = None
+    out_name_: Optional[str] = None
+
+    @property
+    def prefix(self) -> str:
+        return self.prefix_ or self.name
+
+    @property
+    def label(self) -> str:
+        return self.label_ or self.name
+
+    @property
+    def out_name(self) -> str:
+        return self.out_name_ or f"{self.name}_out"
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_specs(self) -> dict:
+        from repro.nn.attention import attn_specs
+        s = attn_specs(self.d_model, self.n_heads, self.n_heads,
+                       self.head_dim)
+        if self.pre_norm:
+            s["norm"] = {"gamma": ParamSpec((self.d_model,), (None,),
+                                            init="ones")}
+        return s
+
+    def weight_memrefs(self) -> dict[str, tuple[str, ...]]:
+        d = {f"{self.prefix}.{nm}.kernel": (nm, "kernel")
+             for nm in ("q", "k", "v", "o")}
+        if self.pre_norm:
+            d[f"{self.prefix}.norm.gamma"] = ("norm", "gamma")
+        return d
+
+    def out_shape(self, in_shape):
+        l, d = in_shape
+        assert d == self.d_model, (in_shape, self)
+        assert self.d_model % self.n_heads == 0, self
+        return in_shape
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP(Node):
+    """Pre-norm residual position-wise feed-forward (``frontend.mlp``).
+
+    relu(x @ w1.T + b1) @ w2.T + b2 on (L, d_model) sequence memrefs, with
+    the same pre-norm/residual sub-block structure as :class:`Attention`.
+    """
+
+    d_model: int = 0
+    hidden: int = 0
+    eps: float = 1e-5
+    pre_norm: bool = True
+    residual: bool = True
+    prefix_: Optional[str] = None
+    label_: Optional[str] = None
+    out_name_: Optional[str] = None
+
+    @property
+    def prefix(self) -> str:
+        return self.prefix_ or self.name
+
+    @property
+    def label(self) -> str:
+        return self.label_ or self.name
+
+    @property
+    def out_name(self) -> str:
+        return self.out_name_ or f"{self.name}_out"
+
+    def param_specs(self) -> dict:
+        s = {
+            "fc1": {"w": ParamSpec((self.hidden, self.d_model),
+                                   (None, None)),
+                    "b": ParamSpec((self.hidden,), (None,), init="zeros")},
+            "fc2": {"w": ParamSpec((self.d_model, self.hidden),
+                                   (None, None)),
+                    "b": ParamSpec((self.d_model,), (None,), init="zeros")},
+        }
+        if self.pre_norm:
+            s["norm"] = {"gamma": ParamSpec((self.d_model,), (None,),
+                                            init="ones")}
+        return s
+
+    def weight_memrefs(self) -> dict[str, tuple[str, ...]]:
+        d = {
+            f"{self.prefix}.fc1.weight": ("fc1", "w"),
+            f"{self.prefix}.fc1.bias": ("fc1", "b"),
+            f"{self.prefix}.fc2.weight": ("fc2", "w"),
+            f"{self.prefix}.fc2.bias": ("fc2", "b"),
+        }
+        if self.pre_norm:
+            d[f"{self.prefix}.norm.gamma"] = ("norm", "gamma")
+        return d
+
+    def out_shape(self, in_shape):
+        l, d = in_shape
+        assert d == self.d_model, (in_shape, self)
+        return in_shape
+
+
 #: The supported layer vocabulary, in one place for error messages.
 NODE_TYPES = (Conv2d, Linear, BatchNorm2d, ReLU, OutputReLU, MaxPool2d,
-              Softmax, NonLocalBlock, Flatten)
+              Softmax, NonLocalBlock, Flatten, RMSNorm, Attention, MLP)
 
 
 class ModuleGraph:

@@ -225,3 +225,40 @@ def test_no_bram_in_forwarding_mode():
     frontend.addmm(ctx2, a2, b2, c2, out2)
     g2 = ctx2.finalize()
     assert list_schedule(g2).resources()["BRAM_ports"] > 0
+
+
+def test_partition_stages_vectorised_matches_scalar_randomised():
+    """The numpy-batched stage-partition DP must agree with the historical
+    scalar DP (same stages, same ii, same first-minimiser tie-breaks) on
+    randomised nest spans."""
+    from types import SimpleNamespace
+
+    from repro.core.schedule import _partition_stages_scalar
+
+    rng = np.random.default_rng(7)
+    for trial in range(60):
+        m = int(rng.integers(1, 40))
+        starts = np.sort(rng.integers(0, 500, size=m))
+        lengths = rng.integers(1, 120, size=m)
+        spans = {f"nest{t}": (int(starts[t]), int(starts[t] + lengths[t]))
+                 for t in range(m)}
+        sched = SimpleNamespace(nest_spans=spans)
+        for n_stages in (1, 2, 3, int(rng.integers(1, 8))):
+            stages_v, ii_v = partition_stages(None, sched, n_stages)
+            stages_s, ii_s = _partition_stages_scalar(None, sched, n_stages)
+            assert ii_v == ii_s, (trial, n_stages)
+            assert stages_v == stages_s, (trial, n_stages)
+
+
+def test_partition_stages_empty_and_degenerate():
+    from types import SimpleNamespace
+
+    from repro.core.schedule import _partition_stages_scalar
+
+    empty = SimpleNamespace(nest_spans={})
+    assert partition_stages(None, empty, 3) == ([[]], 0)
+    assert _partition_stages_scalar(None, empty, 3) == ([[]], 0)
+
+    one = SimpleNamespace(nest_spans={"only": (5, 17)})
+    stages, ii = partition_stages(None, one, 4)   # n_stages > nests
+    assert stages == [["only"]] and ii == 12

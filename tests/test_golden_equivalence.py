@@ -37,6 +37,11 @@ def _conv2d_build(ctx):
     frontend.conv2d(ctx, x, w, b, out)
 
 
+def _transformer_build(ctx):
+    frontend.transformer_encoder_block(ctx, seq=4, d_model=8, n_heads=2,
+                                       ffn=16)
+
+
 def _trace(build, forward=True):
     ctx = Context(forward=forward)
     build(ctx)
@@ -65,9 +70,11 @@ def _schedules_identical(a, b):
     assert a.peak_live == b.peak_live
 
 
-@pytest.fixture(scope="module", params=["braggnn", "conv2d"])
+@pytest.fixture(scope="module",
+                params=["braggnn", "conv2d", "transformer"])
 def workload(request):
-    build = _braggnn_build if request.param == "braggnn" else _conv2d_build
+    build = {"braggnn": _braggnn_build, "conv2d": _conv2d_build,
+             "transformer": _transformer_build}[request.param]
     return request.param, _trace(build)
 
 
@@ -104,6 +111,22 @@ def test_schedule_ports_bit_identical():
     for kwargs in ({}, {"ports_per_array": 1}, {"binding": "rank"}):
         _schedules_identical(list_schedule(g, **kwargs),
                              legacy.list_schedule(g, **kwargs))
+
+
+def test_asap_c_kernel_matches_python_scalar(workload, monkeypatch):
+    """The compiled C ASAP core vs the pure-Python scalar core
+    (``REPRO_SCHED_SCALAR=1`` forces the latter at call time).  On hosts
+    without a C toolchain both runs take the Python path and the test
+    degenerates to determinism — still a valid invariant."""
+    _, g = workload
+    g_opt = passes.optimize(g)
+    for kwargs in ({}, {"unroll_factor": 4}, {"pipelined_units": True},
+                   {"alap_compact": False}):
+        s_c = list_schedule(g_opt, **kwargs)
+        monkeypatch.setenv("REPRO_SCHED_SCALAR", "1")
+        s_py = list_schedule(g_opt, **kwargs)
+        monkeypatch.delenv("REPRO_SCHED_SCALAR")
+        _schedules_identical(s_c, s_py)
 
 
 def test_evaluate_bit_identical(workload, monkeypatch):

@@ -226,7 +226,8 @@ def test_session_stats_accounting():
     s = hls.Session()
     st0 = s.stats()
     assert st0 == {"hits": 0, "misses": 0, "recompiles": 0,
-                   "memory_entries": 0, "pass_memo_entries": 0}
+                   "memory_entries": 0, "pass_memo_entries": 0,
+                   "pass_memo_hits": 0}
 
     s.compile(_small_build, name="acct")          # cold: one miss
     st1 = s.stats()

@@ -348,3 +348,33 @@ def test_cli_conv2d_dry_and_db_rerun(tmp_path, capsys):
                      "--show"])
     assert res3.from_db
     assert res3.best.candidate == res2.best.candidate
+
+
+def test_precision_only_candidates_share_one_design_and_pass_stage():
+    """Precision-only tune candidates (the error/wire-bits sweep) must not
+    recompile: ``to_config`` drops the precision knob, so they map to one
+    CompilerConfig -> one design-cache entry.  Schedule-only mutations do
+    recompile but reuse the optimised graph via the pass-stage memo —
+    both visible through ``Session.stats()``."""
+    import repro.hls as hls
+
+    space = conv2d_space()
+    session = hls.Session()
+    base = space.default()
+    for prec in ("5_11", "5_4", "5_3"):
+        session.compile(_conv_build, name="conv_prec",
+                        config=space.to_config(base.replace("precision",
+                                                            prec)))
+    st = session.stats()
+    assert st["recompiles"] == 1
+    assert st["hits"] == 2
+    assert st["pass_memo_hits"] == 0        # full cache hits skip passes
+
+    # schedule-only mutation: new design, same optimised graph
+    session.compile(_conv_build, name="conv_unroll",
+                    config=space.to_config(base.replace("unroll_factor",
+                                                        4)))
+    st2 = session.stats()
+    assert st2["recompiles"] == 2
+    assert st2["pass_memo_hits"] == 1
+    assert st2["pass_memo_entries"] == 1
