@@ -25,10 +25,12 @@ from repro import obs
 from repro.core import emit, frontend, verify
 from repro.core.schedule import CLOCK_NS
 from repro.core.precision import FORMATS
+from repro.trigger import alveo_u280
 
 log = obs.get_logger(__name__)
 
-U280_DSP = 9024
+# the part catalog is the single source of truth for device envelopes
+U280_DSP = alveo_u280.dsp
 
 
 def run(s: int = 1, img: int = 11) -> dict:

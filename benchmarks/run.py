@@ -13,6 +13,8 @@ so the perf trajectory across PRs is diffable.  Mapping to the paper:
     precision     — Fig. 7   (trained-weight exponents, accuracy sweep)
     roofline      — §Roofline (TPU adaptation; reads dry-run artifacts)
     serving       — deployment: sustained QPS / tail latency / warm boot
+    trigger       — hard-real-time trigger: sustained fps / deadline-miss %
+                    / drop % / p99 decision latency + part budget check
     compile_scaling — compile-time curve conv2d -> BraggNN -> transformer
 
 Re-running the same day merges into the existing ``BENCH_<date>.json``:
@@ -109,6 +111,11 @@ def write_report(results: dict, args, out_path=None) -> pathlib.Path:
     if isinstance(srv, dict) and srv:
         # sustained QPS / tail latency / warm-boot trajectory
         serving = _jsonable(srv)
+    trig = dict(old.get("trigger") or {})
+    tr = results.get("bench_trigger", {}).get("result") or {}
+    if isinstance(tr, dict) and tr.get("backends"):
+        # sustained fps / deadline-miss % / drop % trajectory
+        trig = _jsonable(tr)
     scaling = dict(old.get("compiler_scaling") or {})
     sc = results.get("bench_compile_scaling", {}).get("result") or {}
     if isinstance(sc, dict) and sc.get("workloads"):
@@ -123,6 +130,7 @@ def write_report(results: dict, args, out_path=None) -> pathlib.Path:
         "compiler": compiler,
         "backends_us_per_sample": backends,
         "serving": serving,
+        "trigger": trig,
         "compiler_scaling": scaling,
         "benchmarks": benchmarks,
     }
@@ -208,6 +216,33 @@ def compare_serving(report: dict, path: pathlib.Path) -> None:
                  new_s.get(metric, "-"))
 
 
+def compare_trigger(report: dict, path: pathlib.Path) -> None:
+    """Per-backend before/after diff of the ``trigger`` section (sustained
+    fps, deadline-miss %, drop %, p99 decision latency) against the most
+    recent other report."""
+    previous = sorted(p for p in REPO_ROOT.glob("BENCH_*.json")
+                      if p.resolve() != path.resolve())
+    new_t = report.get("trigger") or {}
+    if not (previous and new_t.get("backends")):
+        return
+    try:
+        old = json.loads(previous[-1].read_text())
+    except (OSError, json.JSONDecodeError):
+        return
+    old_bk = (old.get("trigger") or {}).get("backends") or {}
+    log.info("# trigger vs %s:", previous[-1].name)
+    for name in sorted(new_t["backends"]):
+        nb, ob = new_t["backends"][name], old_bk.get(name) or {}
+        for metric in ("sustained_fps", "miss_pct", "drop_pct", "p99_us"):
+            log.info("#   %s.%s: %s -> %s", name, metric,
+                     ob.get(metric, "-"), nb.get(metric, "-"))
+    check = new_t.get("budget_check") or {}
+    if check:
+        log.info("#   budget check vs %s: %s", check.get("part", "?"),
+                 "PASS" if check.get("passed") else
+                 f"FAIL ({', '.join(check.get('failures', []))})")
+
+
 def compare_compile_scaling(report: dict, path: pathlib.Path) -> None:
     """Per-workload before/after diff of the ``compiler_scaling`` section
     (compile-time curve + scheduler/partition A/Bs) against the most
@@ -251,11 +286,11 @@ def main() -> None:
 
     from benchmarks import (bench_braggnn, bench_compile_scaling,
                             bench_layers, bench_precision, bench_roofline,
-                            bench_serving, bench_tool_runtime)
+                            bench_serving, bench_tool_runtime, bench_trigger)
 
     todo = args.only.split(",") if args.only else [
         "layers", "tool_runtime", "braggnn", "precision", "roofline",
-        "serving", "compile_scaling"]
+        "serving", "trigger", "compile_scaling"]
 
     results: dict = {}
     print("name,us_per_call,derived")
@@ -281,6 +316,9 @@ def main() -> None:
     if "serving" in todo:
         log.info("## deployment: serving engine under bursty load ##")
         _timed("bench_serving", results, bench_serving.main, fast=args.fast)
+    if "trigger" in todo:
+        log.info("## deployment: hard-real-time trigger stream ##")
+        _timed("bench_trigger", results, bench_trigger.main, fast=args.fast)
     if "compile_scaling" in todo:
         log.info("## compile-time scaling curve ##")
         _timed("bench_compile_scaling", results, bench_compile_scaling.main,
@@ -290,6 +328,7 @@ def main() -> None:
     report = json.loads(path.read_text())
     compare_with_previous(report, path)
     compare_serving(report, path)
+    compare_trigger(report, path)
     compare_compile_scaling(report, path)
     log.info("# aggregate report: %s", path)
 

@@ -12,6 +12,8 @@ Subpackages:
     kernels     — Pallas TPU kernels with jnp oracles
     configs     — assigned architectures + shapes
     launch      — mesh construction, dry-run, roofline, train/serve drivers
+    trigger     — hard-real-time streaming trigger: part catalog,
+                  latency/resource budgets, deadline-accounted stream loop
     data/optim/checkpoint/runtime/serving — production substrate
 """
 

@@ -502,8 +502,9 @@ class CompiledDesign:
         res = self.schedule.resources()
         return (f"{self.name}: ops {len(self.graph_raw.ops)} -> "
                 f"{len(self.graph_opt.ops)}, intervals={self.makespan} "
-                f"({self.latency_us:.2f} us), resources={res}, "
-                f"hash={self.design_hash[:12]}")
+                f"({self.latency_us:.2f} us, "
+                f"{self.sample_latency_us:.2f} us/sample), "
+                f"resources={res}, hash={self.design_hash[:12]}")
 
     # -- pickling (the lazy jax fn is a closure: drop it) --------------------
 

@@ -329,12 +329,13 @@ class Design:
 
     # -- tuning -------------------------------------------------------------
 
-    def tune(self, space, *, strategy: str = "hillclimb", budget: int = 8,
+    def tune(self, space, *, strategy: str = "hillclimb", budget=8,
              db=None, dry: bool = True, force: bool = False,
              target_us: Optional[float] = None, on_trial=None,
              batch: int = 2, seed: int = 0, scale: float = 0.4,
              tol_abs: float = 1e-3, tol_rel: float = 5e-2,
-             measure_reps: int = 5):
+             measure_reps: int = 5, trigger_budget=None, part=None,
+             trials: Optional[int] = None):
         """Search ``space`` over this design (delegates to ``repro.tune``).
 
         Results auto-persist to the ``TuningDB`` (the shared versioned
@@ -343,9 +344,30 @@ class Design:
         searching.  Candidates compile through this design's session, so
         they share the trace, the design cache and the pass-stage memo.
         Returns a ``TuneResult``; apply the win with :meth:`apply_tuned`.
+
+        ``budget`` is the trial count (int) — but a
+        :class:`repro.trigger.TriggerBudget` passed here (or via the
+        explicit ``trigger_budget=`` / ``part=`` keywords) becomes a hard
+        feasibility gate instead: a candidate whose compiled schedule
+        blows the latency/II/resource envelope scores ``None`` and can
+        never win, mirroring the numerics gate.  When ``budget`` carries
+        the envelope, the trial count comes from ``trials`` (default 8).
         """
         from repro.tune import Evaluator, Tuner, TuningDB
         from repro.tune.strategies import Bisection, make_strategy
+        from repro.trigger import TriggerBudget
+        if isinstance(budget, TriggerBudget):
+            if trigger_budget is not None:
+                raise ValueError("pass the TriggerBudget either as budget= "
+                                 "or trigger_budget=, not both")
+            trigger_budget, budget = budget, (trials or 8)
+        elif trials is not None:
+            budget = trials
+        if part is not None:
+            import dataclasses as _dc
+            trigger_budget = (TriggerBudget(part=part)
+                              if trigger_budget is None
+                              else _dc.replace(trigger_budget, part=part))
         db = db if db is not None else TuningDB()
         if space.base.forward == self._compiled.config.forward:
             program = self._compiled.graph_raw
@@ -359,7 +381,8 @@ class Design:
         evaluator = Evaluator(program, space, driver=self._session.driver,
                               name=self.name, batch=batch, seed=seed,
                               scale=scale, tol_abs=tol_abs, tol_rel=tol_rel,
-                              measure=not dry, measure_reps=measure_reps)
+                              measure=not dry, measure_reps=measure_reps,
+                              budget=trigger_budget)
         strat = (Bisection(target_us=target_us) if strategy == "bisect"
                  else make_strategy(strategy)) if isinstance(strategy, str) \
             else strategy
@@ -529,6 +552,37 @@ class Design:
             kw["artifact_path"] = manifest["path"]
         return DesignEngine(self, **kw)
 
+    # -- hard-real-time trigger ----------------------------------------------
+
+    def check_budget(self, budget=None, *, part=None):
+        """Check this design against a trigger envelope.
+
+        ``budget`` is a :class:`repro.trigger.TriggerBudget`; ``part`` is
+        a named/synthetic :class:`repro.trigger.Part` (shorthand for a
+        resource-caps-only budget, and an override of the budget's own
+        part when both are given).  Returns the structured
+        :class:`repro.trigger.BudgetReport` — ``.passed``, ``.failures``
+        (named offending constraints), ``.summary()``,
+        ``.raise_if_failed()``::
+
+            design.check_budget(part="alveo_u280").raise_if_failed()
+        """
+        from repro.trigger import check_design
+        return check_design(self, budget, part=part)
+
+    def trigger(self, **kw):
+        """A streaming trigger loop over this design.
+
+        Returns a :class:`repro.trigger.TriggerLoop` (pre-warmed on
+        construction): feed it a :class:`repro.trigger.DetectorFeed` via
+        ``loop.run(feed, n_frames, realtime=...)`` for accept/reject
+        decisions with per-window deadline accounting.  All
+        ``TriggerLoop`` keywords forward (``backend``, ``budget``,
+        ``threshold``, ``window``, ``capacity``...).
+        """
+        from repro.trigger import TriggerLoop
+        return TriggerLoop(self, **kw)
+
     # -- persistence (warm-boot artifacts) -----------------------------------
 
     def save(self, path: Union[str, Path], *,
@@ -583,8 +637,13 @@ class Design:
 
     # -- reporting ----------------------------------------------------------
 
-    def report(self) -> str:
+    def report(self, *, budget=None, part=None) -> str:
         """Pass / schedule / latency summary of the whole artifact.
+
+        With ``budget=`` (a :class:`repro.trigger.TriggerBudget`) and/or
+        ``part=`` a budget-check section is appended — the same
+        structured verdict :meth:`check_budget` returns, rendered one
+        constraint per line.
 
         For the live span/metric view of a compile-and-serve run, enable
         :mod:`repro.obs` (``obs.enable()`` or ``REPRO_OBS=1``): an extra
@@ -619,6 +678,9 @@ class Design:
                      f"{t.get('schedule_s', 0.0):.2f})")
         if self._tuned_candidate is not None:
             lines.append(f"  tuned    : {self._tuned_candidate.label()}")
+        if budget is not None or part is not None:
+            rep = self.check_budget(budget, part=part)
+            lines += ["  " + ln for ln in rep.summary().splitlines()]
         if obs.enabled():
             counters = obs.snapshot()["counters"]
             lines.append(

@@ -3,8 +3,11 @@
 One process-wide :class:`~repro.obs.trace.Tracer` and one
 :class:`~repro.obs.metrics.MetricsRegistry`, shared by the compiler
 (``CompilerDriver.compile`` and every pass round), the pallas emission
-backend (per-kernel timings, plan counters), and the serving stack
-(``DesignEngine`` request lifecycle, queue-depth histogram).
+backend (per-kernel timings, plan counters), the serving stack
+(``DesignEngine`` request lifecycle, queue-depth histogram), and the
+hard-real-time trigger (one ``trigger.window`` span per dispatched
+window; ``trigger.deadline_misses`` / ``trigger.dropped_frames`` /
+``trigger.accepts`` / ``trigger.rejects`` counters).
 
 Disabled by default: every helper here checks one module flag and
 returns a shared no-op before touching the clock, so library users pay

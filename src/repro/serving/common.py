@@ -1,16 +1,26 @@
-"""Queue/lane bookkeeping shared by both serving engines.
+"""Queue/lane bookkeeping shared by the serving engines and the trigger.
 
-The LM continuous-batching engine (:mod:`repro.serving.engine`) and the
+The LM continuous-batching engine (:mod:`repro.serving.engine`), the
 compiled-``Design`` request engine (:mod:`repro.serving.design_engine`)
-need the same machinery: request identity + lifecycle timestamps, a
-thread-safe FIFO with depth telemetry, and tail-latency percentiles.  It
-lives here once instead of being copy-pasted per engine; nothing in this
-module imports models, configs or the compiler, so either engine can be
+and the hard-real-time trigger loop (:mod:`repro.trigger.stream`) need
+the same machinery: request identity + lifecycle timestamps, thread-safe
+queues with depth telemetry, and tail-latency percentiles.  It lives
+here once instead of being copy-pasted per engine; nothing in this
+module imports models, configs or the compiler, so every consumer can be
 used standalone.
+
+Two queue disciplines, two worlds:
+
+  * :class:`RequestQueue` — unbounded FIFO; a slow server grows the
+    queue (request/response serving, where dropping is the failure);
+  * :class:`DropOldestRing` — bounded ring that *never* blocks or grows;
+    a slow consumer loses the **oldest** entries (streaming front-ends,
+    where back-pressuring the producer — a detector — is the failure).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
@@ -228,3 +238,63 @@ class RequestQueue:
                 p95 = float(d)
                 break
         return {"max": max(d for _, d in events), "mean": mean, "p95": p95}
+
+
+class DropOldestRing:
+    """Bounded buffer whose producer can never be blocked or slowed.
+
+    Pushing onto a full ring evicts the **oldest** entry (returned to the
+    caller, counted in ``dropped``) instead of blocking, growing, or
+    refusing — the overrun policy of a hard-real-time front-end: a
+    trigger must never back-pressure the detector, and when it falls
+    behind the *stalest* frames are the right ones to lose.  A single
+    mutex guards O(1) deque operations, so the producer-side critical
+    section is a few dozen nanoseconds — not lock-free, but never
+    producer-visible at detector frame rates.
+
+    FIFO otherwise: ``pop``/``pop_many`` return survivors oldest-first.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._items: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self.pushed = 0
+        self.dropped = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    def push(self, item: Any) -> Optional[Any]:
+        """Append ``item``; returns the evicted oldest entry on overrun
+        (``None`` when the ring had room)."""
+        with self._lock:
+            evicted = None
+            if len(self._items) >= self.capacity:
+                evicted = self._items.popleft()
+                self.dropped += 1
+            self._items.append(item)
+            self.pushed += 1
+        if evicted is not None:
+            obs.inc("trigger.dropped_frames")
+        return evicted
+
+    def pop(self) -> Optional[Any]:
+        """The oldest surviving entry, or ``None`` when empty."""
+        with self._lock:
+            return self._items.popleft() if self._items else None
+
+    def pop_many(self, n: int) -> list:
+        """Up to ``n`` oldest survivors, oldest-first."""
+        with self._lock:
+            out = []
+            while self._items and len(out) < n:
+                out.append(self._items.popleft())
+            return out
+
+    def clear(self) -> None:
+        with self._lock:
+            self._items.clear()

@@ -29,7 +29,7 @@ from typing import Optional
 from repro.tune.db import TuningDB, lookup_best
 from repro.tune.evaluator import Evaluator, Trial, roofline_estimate_us
 from repro.tune.space import (Candidate, Knob, SearchSpace, braggnn_space,
-                              conv2d_space)
+                              conv2d_space, trigger_space)
 from repro.tune.strategies import (STRATEGIES, Bisection, HillClimb,
                                    RandomSearch, Strategy, make_strategy,
                                    sweep_variants)
@@ -38,6 +38,7 @@ from repro.tune.tuner import TuneResult, Tuner
 __all__ = [
     "TuningDB", "lookup_best", "Evaluator", "Trial", "roofline_estimate_us",
     "Candidate", "Knob", "SearchSpace", "braggnn_space", "conv2d_space",
+    "trigger_space",
     "STRATEGIES", "Bisection", "HillClimb", "RandomSearch", "Strategy",
     "make_strategy", "sweep_variants", "TuneResult", "Tuner",
     "best_config_for",

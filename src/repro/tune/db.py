@@ -117,14 +117,17 @@ def best_entry(db: TuningDB, design_fingerprint: str,
                space_hash: str) -> Optional[dict]:
     """The winning entry across every recorded run context, or ``None``.
 
-    Entries whose best failed the numerics gate never win (the tuner logs
-    them, but an invalid config must not reach serving).  Wall-clocked
+    Entries whose best failed the numerics gate — or the trigger-budget
+    feasibility gate — never win (the tuner logs them, but an invalid or
+    over-budget config must not reach serving).  Wall-clocked
     (measure-mode) results beat dry ones; ties break on latency.
     """
     candidates = []
     for ctx, entry in db.entries_for(design_fingerprint, space_hash).items():
         best = entry.get("best") or {}
         if not best.get("valid") or "candidate" not in best:
+            continue
+        if best.get("feasible", True) is False:
             continue
         ev = (entry.get("context") or {}).get("eval") or {}
         candidates.append(((0 if ev.get("mode") == "measure" else 1,

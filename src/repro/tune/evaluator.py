@@ -66,14 +66,21 @@ class Trial:
     measured_cpu_us: Optional[float]  # wall-clocked (measure mode only)
     compile_s: float
     cached: bool                  # design served from the design cache
+    #: trigger-budget gate verdict (True when no budget was configured);
+    #: an infeasible candidate scores ``None`` and can never win
+    feasible: bool = True
+    #: the named constraints the candidate blew (``DSP``, ``latency_us``...)
+    budget_failures: list = dataclasses.field(default_factory=list)
 
     def score(self) -> Optional[tuple]:
         """Ordering key: lower is better; ``None`` = ineligible.
 
         Latency first, then DSP units, then wire bits (the SLL-crossing
-        pressure that forced the paper's (5,4) -> (5,3) step).
+        pressure that forced the paper's (5,4) -> (5,3) step).  Both
+        gates bite here: numerics-invalid and budget-infeasible trials
+        are ineligible.
         """
-        if not self.valid:
+        if not self.valid or not self.feasible:
             return None
         return (self.latency_us, self.resources.get("DSP", 0),
                 self.wire_bits)
@@ -93,7 +100,9 @@ class Trial:
         return cls(**d)
 
     def summary(self) -> str:
-        tag = "ok" if self.valid else "INVALID"
+        tag = ("ok" if self.valid and self.feasible
+               else "INVALID" if not self.valid
+               else f"OVER BUDGET ({', '.join(self.budget_failures)})")
         cpu = (f", cpu={self.measured_cpu_us:.1f}us"
                if self.measured_cpu_us is not None else "")
         return (f"[{tag}] {self.latency_us:8.2f} us  "
@@ -130,6 +139,11 @@ class Evaluator:
         ``tol_abs`` gates fp32 candidates (reassociation-level error);
         ``tol_rel`` gates quantised candidates on max relative error
         against the fp32 interpreter reference.
+
+    ``budget`` (a :class:`repro.trigger.TriggerBudget`) adds the trigger
+    feasibility gate: every candidate's compiled schedule is checked
+    against the envelope and an over-budget trial is marked infeasible —
+    ineligible to win, exactly like a numerics-invalid one.
     """
 
     def __init__(self, program: Union[Graph, "BuildFn"], space: SearchSpace,
@@ -137,7 +151,7 @@ class Evaluator:
                  name: str = "design", batch: int = 2, seed: int = 0,
                  scale: float = 0.4, tol_abs: float = 1e-3,
                  tol_rel: float = 5e-2, measure: bool = False,
-                 measure_reps: int = 5):
+                 measure_reps: int = 5, budget=None):
         self.driver = driver or CompilerDriver()
         self.space = space
         self.name = name
@@ -145,6 +159,7 @@ class Evaluator:
         self.tol_rel = tol_rel
         self.measure = measure
         self.measure_reps = measure_reps
+        self.budget = budget
         self.batch = batch
         self.seed = seed
         self.scale = scale
@@ -175,7 +190,9 @@ class Evaluator:
         """
         return {"batch": self.batch, "seed": self.seed, "scale": self.scale,
                 "tol_abs": self.tol_abs, "tol_rel": self.tol_rel,
-                "mode": "measure" if self.measure else "dry"}
+                "mode": "measure" if self.measure else "dry",
+                "budget": self.budget.key() if self.budget is not None
+                else None}
 
     # -- gates --------------------------------------------------------------
 
@@ -227,6 +244,12 @@ class Evaluator:
         tol = self.tol_abs if fmt is None else self.tol_rel * self._ref_denom
         valid = err <= tol
 
+        feasible, failures = True, []
+        if self.budget is not None:
+            from repro.trigger.budget import check_design
+            rep = check_design(design, self.budget)
+            feasible, failures = rep.passed, rep.failures
+
         measured = self._measure_cpu_us(design) if self.measure else None
         self.n_evals += 1
         return Trial(
@@ -236,7 +259,8 @@ class Evaluator:
             resources=design.schedule.resources(),
             wire_bits=fmt.wire_bits if fmt is not None else 32,
             est_roofline_us=roofline_estimate_us(design),
-            measured_cpu_us=measured, compile_s=compile_s, cached=cached)
+            measured_cpu_us=measured, compile_s=compile_s, cached=cached,
+            feasible=feasible, budget_failures=failures)
 
     def compile_candidate(self, candidate: Candidate) -> CompiledDesign:
         """The design for a (stored) candidate — how serving loads a win."""

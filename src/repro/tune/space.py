@@ -244,3 +244,21 @@ def conv2d_space(*, base: Optional[CompilerConfig] = None) -> SearchSpace:
         Knob("pipelined_units", (False, True)),
         Knob(PRECISION_KNOB, ("fp32", "5_4")),
     ), base=base, name="conv2d")
+
+
+def trigger_space(*, base: Optional[CompilerConfig] = None) -> SearchSpace:
+    """The deployment-envelope space for trigger tuning.
+
+    An unroll/stage ladder that trades DSP pressure against latency:
+    full-capacity unrolling is the fastest schedule but the heaviest
+    footprint, so it is exactly the knob a part-level resource cap
+    (``Design.tune(..., budget=TriggerBudget(part=...))``) bites on —
+    under a tight DSP cap the winner slides down the ladder to the
+    fastest *feasible* rung.
+    """
+    return SearchSpace((
+        Knob("pipeline", (DEFAULT_PIPELINE, ("cse", "dce"))),
+        Knob("unroll_factor", (None, 1024, 256, 64, 16, 4)),
+        Knob("pipelined_units", (True, False)),
+        Knob("n_stages", (3, 1)),
+    ), base=base, name="trigger")

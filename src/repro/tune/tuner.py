@@ -50,8 +50,14 @@ class TuneResult:
     def summary(self) -> str:
         src = "tuning DB" if self.from_db else \
             f"{len(self.trials)} trials in {self.wall_s:.1f}s"
-        note = "" if self.best.valid else \
-            " [NO candidate passed the numerics gate — baseline shown]"
+        if not self.best.valid:
+            note = " [NO candidate passed the numerics gate — baseline shown]"
+        elif not getattr(self.best, "feasible", True):
+            note = (" [NO candidate fit the trigger budget — baseline "
+                    "shown, over on "
+                    f"{', '.join(self.best.budget_failures) or '?'}]")
+        else:
+            note = ""
         return (f"best of {src}: {self.best.latency_us:.2f} us/sample "
                 f"(baseline {self.baseline.latency_us:.2f} us, "
                 f"{self.speedup:.2f}x)  {self.best.candidate.label()}{note}")

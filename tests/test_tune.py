@@ -378,3 +378,108 @@ def test_precision_only_candidates_share_one_design_and_pass_stage():
     assert st2["recompiles"] == 2
     assert st2["pass_memo_hits"] == 1
     assert st2["pass_memo_entries"] == 1
+
+
+# -- trigger-budget gate -----------------------------------------------------
+
+
+def test_budget_gate_flips_winner(tmp_path):
+    """The acceptance criterion: the fastest candidate blows the DSP cap,
+    so the constrained search must crown the fastest *feasible* one —
+    a different winner than the unconstrained run."""
+    from repro.trigger import TriggerBudget
+
+    space = conv2d_space()
+    driver = CompilerDriver()
+
+    # unconstrained: full-capacity unrolling wins (heaviest DSP footprint)
+    ev = Evaluator(_conv_build, space, driver=driver, name="conv_gate")
+    free = Tuner(ev, RandomSearch(seed=0), budget=24).run()
+    free_dsp = free.best.resources["DSP"]
+    assert free.best.feasible and free.best.budget_failures == []
+
+    # cap below the free winner's footprint: the winner must change, and
+    # the new one must actually fit
+    budget = TriggerBudget(max_dsp=free_dsp - 1)
+    ev2 = Evaluator(_conv_build, space, driver=driver, name="conv_gate",
+                    budget=budget)
+    capped = Tuner(ev2, RandomSearch(seed=0), budget=24).run()
+    assert capped.best.candidate != free.best.candidate
+    assert capped.best.feasible
+    assert capped.best.resources["DSP"] < free_dsp
+    assert capped.best.latency_us >= free.best.latency_us
+
+    # over-budget trials are logged as infeasible with the offender named,
+    # and are ineligible (score None) — mirroring the numerics gate
+    over = [t for t in capped.trials if not t.feasible]
+    assert over
+    assert all(t.score() is None for t in over)
+    assert all("DSP" in t.budget_failures for t in over)
+    assert any("OVER BUDGET" in t.summary() for t in over)
+
+    # the budget is part of the evaluation context: the two runs are
+    # different experiments
+    assert ev.settings()["budget"] is None
+    assert ev2.settings()["budget"] == budget.key()
+
+
+def test_design_tune_accepts_trigger_budget(tmp_path):
+    """`Design.tune(..., budget=TriggerBudget(...))` — the literal
+    acceptance-criterion spelling — routes the envelope to the gate and
+    keeps the trial count on `trials=`."""
+    import repro.hls as hls
+    from repro.trigger import TriggerBudget
+
+    session = hls.Session()
+    design = session.compile(_conv_build, name="conv_design_tune")
+    space = conv2d_space()
+
+    free = design.tune(space, strategy=RandomSearch(seed=0), trials=24,
+                       db=TuningDB(tmp_path / "free.json"))
+    cap = free.best.resources["DSP"] - 1
+    capped = design.tune(space, strategy=RandomSearch(seed=0),
+                         budget=TriggerBudget(max_dsp=cap), trials=24,
+                         db=TuningDB(tmp_path / "capped.json"))
+    assert capped.best.candidate != free.best.candidate
+    assert capped.best.resources["DSP"] <= cap
+
+    # part= shorthand builds the envelope too
+    from repro.trigger import part
+    capped2 = design.tune(space, strategy=RandomSearch(seed=0), trials=24,
+                          part=part(dsp=cap),
+                          db=TuningDB(tmp_path / "capped2.json"))
+    assert capped2.best.candidate == capped.best.candidate
+
+    with pytest.raises(ValueError, match="not both"):
+        design.tune(space, budget=TriggerBudget(max_dsp=4),
+                    trigger_budget=TriggerBudget(max_dsp=4))
+
+
+def test_db_infeasible_best_never_served(tmp_path):
+    """An all-infeasible run persists for the log, but its best must
+    never reach serving — exactly like an invalid (numerics) best."""
+    from repro.tune.db import best_entry
+    from repro.trigger import TriggerBudget
+
+    db = TuningDB(tmp_path / "db.json")
+    space = conv2d_space()
+    impossible = TriggerBudget(max_dsp=1)          # nothing fits
+    ev = Evaluator(_conv_build, space, budget=impossible)
+    res = Tuner(ev, RandomSearch(seed=0), db=db, budget=4).run()
+    assert not res.best.feasible
+    assert "trigger budget" in res.summary()
+    assert "DSP" in res.summary()
+    assert best_entry(db, res.design_fingerprint, res.space_hash) is None
+    assert best_config_for(ev.graph, space, db=db) is None
+
+    # a feasible run coexists under its own context and wins the lookup
+    ev2 = Evaluator(_conv_build, space, budget=TriggerBudget(max_dsp=10 ** 6))
+    res2 = Tuner(ev2, RandomSearch(seed=0), db=db, budget=4).run()
+    assert res2.best.feasible
+    hit = best_config_for(ev2.graph, space, db=db)
+    assert hit is not None and hit[1] == res2.best.candidate
+
+    # trial JSON roundtrips the gate fields (additive schema change)
+    back = Trial.from_json(json.loads(json.dumps(res.best.to_json())))
+    assert back.feasible is False
+    assert back.budget_failures == res.best.budget_failures
